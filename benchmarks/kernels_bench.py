@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: wall time of the interpret-mode kernel is
+meaningless (Python interpreter), so the derived metric reported is the
+oracle-vs-kernel max abs error on realistic shapes, plus the XLA ref-path
+us_per_call on CPU for regression tracking."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    out = []
+
+    x = jax.random.normal(ks[0], (8, 128, 512))
+    sc = jnp.ones((512,))
+    err = float(jnp.abs(ops.rmsnorm(x, sc, interpret=True)
+                        - ref.rmsnorm_ref(x, sc)).max())
+    us = _time(jax.jit(lambda a, b: ref.rmsnorm_ref(a, b)), x, sc)
+    out.append(("kernel_rmsnorm_8x128x512", us, f"maxerr={err:.2e}"))
+
+    a = jax.random.normal(ks[1], (4, 64, 256))
+    b = jax.random.normal(ks[2], (4, 64, 128))
+    w = jax.random.normal(ks[3], (384, 512)) * 0.05
+    err = float(jnp.abs(
+        ops.splitcat_linear([a, b], w, interpret=True)
+        - ref.splitcat_linear_ref([a, b], w)).max())
+    us = _time(jax.jit(lambda *t: ref.splitcat_linear_ref([t[0], t[1]],
+                                                          t[2])), a, b, w)
+    out.append(("kernel_splitcat_4x64_384to512", us, f"maxerr={err:.2e}"))
+
+    q = jax.random.normal(ks[4], (1, 256, 4, 64))
+    k = jax.random.normal(ks[5], (1, 256, 2, 64))
+    v = jax.random.normal(ks[6], (1, 256, 2, 64))
+    kr, vr = jnp.repeat(k, 2, 2), jnp.repeat(v, 2, 2)
+    err = float(jnp.abs(
+        ops.flash_attention(q, k, v, block_q=64, block_kv=64,
+                            interpret=True)
+        - ref.flash_attention_ref(q, kr, vr)).max())
+    us = _time(jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)),
+               q, kr, vr)
+    out.append(("kernel_flash_attn_s256_h4_d64", us, f"maxerr={err:.2e}"))
+
+    xs = jax.random.normal(ks[7], (2, 128, 4, 32)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (2, 128, 4)))
+    A = -jnp.exp(jax.random.normal(ks[1], (4,)) * 0.2)
+    Bm = jax.random.normal(ks[2], (2, 128, 1, 16)) * 0.3
+    Cm = jax.random.normal(ks[3], (2, 128, 1, 16)) * 0.3
+    err = float(jnp.abs(
+        ops.ssd_scan(xs, dt, A, Bm, Cm, chunk=32, interpret=True)
+        - ref.ssd_scan_ref(xs, dt, A, Bm, Cm)).max())
+    us = _time(jax.jit(lambda *t: ref.ssd_scan_ref(*t)), xs, dt, A, Bm, Cm)
+    out.append(("kernel_ssd_scan_s128_h4", us, f"maxerr={err:.2e}"))
+    return out

@@ -1,0 +1,150 @@
+"""§Perf hillclimb driver — reruns the three selected pairs' baseline vs
+optimized measurements and writes results/perf.json.
+
+    PYTHONPATH=src:. python -m benchmarks.perf_hillclimb
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import roofline as R
+from repro import optim
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core.wire_compress import quantized_wire, wire_bytes
+from repro.launch import mesh as meshlib
+from repro.launch.dryrun import collective_bytes_of_hlo
+from repro.models import build_model, input_specs
+from repro.nn import dist
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results", "perf.json")
+
+
+def pair_deepseek_moe(mesh):
+    """MoE block: GSPMD global dispatch vs shard_map expert parallelism."""
+    cfg = get_config("deepseek_v2_236b")
+    model = build_model(cfg)
+    shape = INPUT_SHAPES["train_4k"]
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    x_spec = jax.ShapeDtypeStruct(
+        (shape.global_batch, shape.seq_len, cfg.d_model), cfg.dtype)
+    gi = len(model.groups) - 1
+    g = model.groups[gi]
+    out = {}
+    for tag, ep in (("baseline_gspmd", None), ("optimized_ep", "model")):
+        spec = g.specs[0]
+        if ep:
+            spec = dataclasses.replace(
+                spec, moe=dataclasses.replace(spec.moe, ep_axis=ep))
+        g2 = dataclasses.replace(g, specs=(spec,))
+        c = R._one_block_cost(model, g2, params_shapes["groups"][gi], mesh,
+                              x_spec, "train")
+        out[tag] = {"per_layer_flops": c["flops"],
+                    "per_layer_collective_bytes": c["collective_bytes"],
+                    "by_kind": c["collective_by_kind"]}
+    return out
+
+
+def pair_qwen_decode(mesh):
+    """Decode block: fixed-spec GSPMD vs split-KV shard_map."""
+    cfg = get_config("qwen1_5_32b")
+    model = build_model(cfg)
+    shape = INPUT_SHAPES["decode_32k"]
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_all = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    x_spec = jax.ShapeDtypeStruct((shape.global_batch, 1, cfg.d_model),
+                                  cfg.dtype)
+    g = model.groups[0]
+    out = {}
+    for tag, shard in (("baseline_fixedspec", None),
+                       ("optimized_splitkv", "model")):
+        spec = g.specs[0]
+        if shard:
+            spec = dataclasses.replace(
+                spec, attn=dataclasses.replace(spec.attn,
+                                               decode_kv_shard=shard))
+        g2 = dataclasses.replace(g, specs=(spec,))
+        c = R._one_block_cost(model, g2, params_shapes["groups"][0], mesh,
+                              x_spec, "decode", cache_shapes=cache_all[0])
+        out[tag] = {"per_layer_flops": c["flops"],
+                    "per_layer_collective_bytes": c["collective_bytes"],
+                    "by_kind": c["collective_by_kind"]}
+    return out
+
+
+def pair_internvl2_split(mesh):
+    """The paper's configuration: split train step, plain vs int8 wire."""
+    cfg = get_config("internvl2_2b")
+    model = build_model(cfg)
+    shape = INPUT_SHAPES["train_4k"]
+    specs = input_specs(cfg, shape)
+    cut = cfg.default_cut
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pc_shapes, ps_shapes = jax.eval_shape(
+        lambda p: model.split_params(p, cut), params_shapes)
+    pc_sh = meshlib.param_shardings(pc_shapes, mesh)
+    ps_sh = meshlib.param_shardings(ps_shapes, mesh)
+    b_sh = meshlib.batch_shardings(specs, mesh)
+
+    def make_step(quant):
+        def split_loss(pc, ps, batch):
+            act = model.apply_client(pc, batch, cut, remat=True)
+            if quant:
+                act = quantized_wire(act)
+            logits = model.apply_server(ps, act, cut, remat=True)
+            logits = logits[:, cfg.n_patches:]
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            return -jnp.take_along_axis(lp, batch["labels"][..., None],
+                                        -1).mean()
+
+        def step(pc, ps, batch):
+            return jax.value_and_grad(split_loss, argnums=(0, 1))(
+                pc, ps, batch)
+        return step
+
+    s_total = specs["tokens"].shape[1] + cfg.n_patches
+    wshape = (shape.global_batch, s_total, cfg.d_model)
+    out = {}
+    for tag, quant in (("baseline_bf16_wire", False),
+                       ("optimized_int8_wire", True)):
+        with mesh:
+            lowered = jax.jit(make_step(quant),
+                              in_shardings=(pc_sh, ps_sh, b_sh)).lower(
+                pc_shapes, ps_shapes, specs)
+        coll = collective_bytes_of_hlo(lowered.compile().as_text())
+        out[tag] = {
+            "in_chip_collective_bytes_body_once": float(sum(coll.values())),
+            "wire_bytes_per_direction": wire_bytes(
+                wshape, quantized=quant, base_dtype=cfg.dtype),
+        }
+    return out
+
+
+def main():
+    single = meshlib.make_production_mesh(multi_pod=False)
+    multi = meshlib.make_production_mesh(multi_pod=True)
+    dist.set_mesh(single)
+    db = {}
+    print("[1/3] deepseek MoE EP ...", flush=True)
+    db["deepseek_v2_236b|train_4k"] = pair_deepseek_moe(single)
+    print("[2/3] qwen split-KV decode ...", flush=True)
+    db["qwen1_5_32b|decode_32k"] = pair_qwen_decode(single)
+    print("[3/3] internvl2 split wire (multi-pod) ...", flush=True)
+    dist.set_mesh(multi)
+    db["internvl2_2b|train_4k|split"] = pair_internvl2_split(multi)
+    os.makedirs(os.path.dirname(os.path.abspath(OUT)), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(db, f, indent=1)
+    for k, v in db.items():
+        print(f"== {k}")
+        for tag, r in v.items():
+            print(f"   {tag}: {json.dumps(r)[:160]}")
+
+
+if __name__ == "__main__":
+    main()

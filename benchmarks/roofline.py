@@ -1,0 +1,422 @@
+"""Roofline analysis (deliverable g).
+
+For every (arch × input-shape) on the single-pod 16×16 mesh, derive:
+
+    compute term    = FLOPs / (chips × 197e12)          [bf16 peak]
+    memory term     = bytes accessed / (chips × 819e9)  [HBM bw]
+    collective term = collective bytes / (chips × 50e9) [ICI link bw]
+
+XLA's cost_analysis counts a scan body ONCE (verified empirically), so a
+full-model lowering undercounts layer costs by ~L×.  Method: lower ONE
+block per scan-group with the production shardings, take its
+flops/bytes/collectives, scale by the group's layer count, and add the
+embed/head terms (analytic matmul costs).  The full-model compile (from
+launch/dryrun.py, results/dryrun.json) still provides the per-device
+memory footprint and the proof-of-compilation; this module provides the
+executed-cost model.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline [--arch ... --shape ...]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch import mesh as meshlib
+from repro.launch.dryrun import collective_bytes_of_hlo
+from repro.models import build_model, input_specs, supports_shape
+from repro.models.lm import LM
+from repro.nn import transformer as T
+
+# --- hardware constants (TPU v5e) ---
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+CHIPS = 256
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "roofline.json")
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results",
+                      "dryrun.json")
+
+
+def _cost_of(lowered):
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes_of_hlo(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": float(sum(coll.values())),
+        "collective_by_kind": coll,
+    }
+
+
+def _one_block_cost(model: LM, g, gp_shapes, mesh, x_spec, mode: str,
+                    cache_shapes=None):
+    """Lower one super-block (fwd, fwd+bwd, or decode) with production
+    shardings; return cost dict."""
+    # strip the leading stacked dim from params
+    one_shapes = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), gp_shapes)
+    p_spec = meshlib.param_pspecs(one_shapes, mesh)
+    p_sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), p_spec)
+    ba = meshlib.batch_axes(mesh)
+    if x_spec.shape[0] % (16 * (2 if "pod" in mesh.axis_names else 1)) == 0:
+        x_ps = P(ba, None, None)
+    elif x_spec.shape[1] % 16 == 0:
+        x_ps = P(None, ba, None)
+    else:
+        x_ps = P(None, None, None)
+    x_sh = NamedSharding(mesh, x_ps)
+
+    def fwd(p, x):
+        for i, spec in enumerate(g.specs):
+            x = T.block_apply(p[str(i)], spec, x)
+        return x
+
+    if mode == "train":
+        def loss_fn(p, x):
+            return jnp.sum(fwd(p, x).astype(jnp.float32))
+        fn = jax.value_and_grad(loss_fn)
+    elif mode == "prefill":
+        fn = fwd
+    else:  # decode
+        one_cache = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+            cache_shapes)
+        c_spec = meshlib.cache_pspecs(one_cache, mesh)
+        c_sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                      c_spec)
+
+        def dec(p, x, c):
+            new_c = {}
+            for i, spec in enumerate(g.specs):
+                x, new_c[str(i)] = T.block_decode(p[str(i)], spec, x,
+                                                  c[str(i)])
+            return x, new_c
+
+        with mesh:
+            lowered = jax.jit(dec, in_shardings=(p_sh, x_sh, c_sh)).lower(
+                one_shapes, x_spec, one_cache)
+        return _cost_of(lowered)
+
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=(p_sh, x_sh)).lower(
+            one_shapes, x_spec)
+    return _cost_of(lowered)
+
+
+def _embed_head_flops(cfg, B, S, mode: str) -> float:
+    """Analytic embed-gather (negligible) + head matmul flops."""
+    mult = 3.0 if mode == "train" else 1.0   # fwd+bwd ~= 3x fwd
+    toks = B * (S if mode != "decode" else 1)
+    head = 2.0 * toks * cfg.d_model * cfg.vocab
+    if mode == "prefill":
+        head = 2.0 * B * cfg.d_model * cfg.vocab    # last-position only
+    return mult * head
+
+
+def model_flops(cfg, B, S, mode: str) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE), D = tokens."""
+    n = active_param_count(cfg)
+    toks = B * (S if mode != "decode" else 1)
+    per_tok = 6.0 * n if mode == "train" else 2.0 * n
+    return per_tok * toks
+
+
+def active_param_count(cfg) -> float:
+    """Non-embedding active params (MoE: top_k + shared experts only)."""
+    d = cfg.d_model
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        di = cfg.ssm_expand * d
+        conv_dim = di + 2 * cfg.ssm_groups * cfg.ssm_state
+        per = d * (2 * di + 2 * cfg.ssm_groups * cfg.ssm_state
+                   + di // cfg.ssm_head_dim) \
+            + 4 * conv_dim * conv_dim + di * d
+        return L * per
+    if cfg.pattern:
+        att = sum(1 for k in cfg.pattern if k == "attn") / len(cfg.pattern)
+        rec = 1 - att
+        hd = cfg.resolved_head_dim
+        att_per = d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) \
+            + cfg.n_heads * hd * d
+        w = cfg.lru_width or d
+        rec_per = 2 * d * w + 4 * w * w + 2 * w * w + w * d
+        mlp_per = 2 * d * cfg.d_ff
+        return L * (att * att_per + rec * rec_per + mlp_per)
+    hd = cfg.resolved_head_dim
+    if cfg.attn_kind == "mla":
+        attn_per = d * (cfg.q_lora_rank or d) \
+            + (cfg.q_lora_rank or d) * cfg.n_heads * (cfg.qk_nope_head_dim
+                                                      + cfg.qk_rope_head_dim) \
+            + d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) \
+            + cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_head_dim
+                                                + cfg.v_head_dim) \
+            + cfg.n_heads * cfg.v_head_dim * d
+    else:
+        attn_per = d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) \
+            + cfg.n_heads * hd * d
+    if cfg.n_experts:
+        act_exp = cfg.top_k + cfg.n_shared
+        moe_per = 3 * d * cfg.d_ff * act_exp + d * cfg.n_experts
+        dense_per = 3 * d * (cfg.dense_d_ff or cfg.d_ff)
+        n_moe = cfg.n_layers - cfg.first_dense
+        return cfg.n_layers * attn_per + n_moe * moe_per \
+            + cfg.first_dense * dense_per
+    mlp_per = 3 * d * cfg.d_ff if cfg.mlp == "swiglu" else 2 * d * cfg.d_ff
+    if cfg.encdec:
+        # enc self+mlp, dec self+cross+mlp
+        return cfg.n_enc_layers * (attn_per + 2 * d * cfg.d_ff) \
+            + cfg.n_layers * (2 * attn_per + 2 * d * cfg.d_ff)
+    return L * (attn_per + mlp_per)
+
+
+def sharded_bytes(shapes_tree, specs_tree, mesh) -> float:
+    """Exact per-device resident bytes of a sharded pytree."""
+    leaves_s = jax.tree_util.tree_leaves(shapes_tree)
+    leaves_p = jax.tree_util.tree_leaves(
+        specs_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    total = 0.0
+    for sh, spec in zip(leaves_s, leaves_p):
+        n = 1.0
+        for d in sh.shape:
+            n *= d
+        shards = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            for a in axes:
+                shards *= mesh.shape[a]
+        total += n * jnp.dtype(sh.dtype).itemsize / shards
+    return total
+
+
+# fused activation-traffic factor: reads+writes crossing matmul/fusion
+# boundaries per token per layer, in units of d_model elements.
+ALPHA_FWD = 12.0
+ALPHA_TRAIN = 30.0           # fwd + bwd + remat recompute
+
+
+def analytic_memory_bytes(cfg, mesh, mode, B, S, params_dev_bytes,
+                          cache_dev_bytes=0.0) -> float:
+    """Per-device HBM traffic per step under TPU-style fusion:
+       params (read [+ optimizer update traffic]) + activation streams
+       [+ KV/state cache read-modify-write for decode]."""
+    data_shards = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    model_shards = mesh.shape["model"]
+    toks_dev = B * (S if mode != "decode" else 1) / data_shards
+    act = toks_dev * (cfg.d_model / model_shards) \
+        * jnp.dtype(cfg.dtype).itemsize \
+        * (ALPHA_TRAIN if mode == "train" else ALPHA_FWD) * cfg.n_layers
+    p = params_dev_bytes * (8.0 if mode == "train" else 1.0)
+    # decode reads the whole cache once per step (+ writes one slot)
+    return act + p + cache_dev_bytes
+
+
+def analyze_combo(arch_id: str, shape_name: str, mesh, dryrun_db: dict):
+    cfg = get_config(arch_id)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+    if cfg.encdec:
+        return analyze_encdec(cfg, shape, mesh, dryrun_db, arch_id)
+
+    long_ctx = shape_name == "long_500k"
+    model = build_model(cfg, long_context=long_ctx)
+    specs = input_specs(cfg, shape)
+    B = shape.global_batch
+    S = shape.seq_len
+    mode = shape.kind
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    totals = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+    per_group = []
+    if mode == "decode":
+        cache_shapes_all = jax.eval_shape(
+            lambda: model.init_cache(B, S))
+        x_spec = jax.ShapeDtypeStruct((B, 1, cfg.d_model), cfg.dtype)
+    else:
+        seq_here = specs["tokens"].shape[1]
+        if cfg.family == "vlm":
+            seq_here += cfg.n_patches
+        x_spec = jax.ShapeDtypeStruct((B, seq_here, cfg.d_model), cfg.dtype)
+
+    for gi, (g, gp) in enumerate(zip(model.groups, params_shapes["groups"])):
+        cache_shapes = cache_shapes_all[gi] if mode == "decode" else None
+        c = _one_block_cost(model, g, gp, mesh, x_spec, mode,
+                            cache_shapes=cache_shapes)
+        for k in totals:
+            totals[k] += c[k] * g.n_repeat
+        per_group.append({"n_repeat": g.n_repeat, **c})
+
+    # embed + head (analytic GLOBAL flops -> per-device via /CHIPS; the
+    # per-block costs from cost_analysis are already per-device in SPMD)
+    eh_flops = _embed_head_flops(cfg, B, specs["tokens"].shape[1], mode)
+    eh_bytes = 2.0 * cfg.vocab * cfg.d_model * jnp.dtype(cfg.dtype).itemsize
+    totals["flops"] += eh_flops / CHIPS
+    totals["bytes"] += eh_bytes / CHIPS
+
+    # cost_analysis is PER-DEVICE (verified: sharded matmul reports
+    # global/n_devices), so divide by per-chip peaks directly.
+    compute_s = totals["flops"] / PEAK_FLOPS
+    coll_s = totals["collective_bytes"] / ICI_BW
+
+    # memory term: the CPU backend's "bytes accessed" counts unfused op
+    # traffic (~2 orders above fused-TPU HBM traffic), so the roofline
+    # memory term uses the analytic fused model; the HLO number is kept
+    # as an upper-bound reference.
+    p_specs = meshlib.param_pspecs(params_shapes, mesh)
+    params_dev_bytes = sharded_bytes(params_shapes, p_specs, mesh)
+    cache_dev_bytes = 0.0
+    if mode == "decode":
+        c_specs = meshlib.cache_pspecs(cache_shapes_all, mesh)
+        cache_dev_bytes = sharded_bytes(cache_shapes_all, c_specs, mesh)
+    mem_bytes = analytic_memory_bytes(cfg, mesh, mode, B,
+                                      specs["tokens"].shape[1],
+                                      params_dev_bytes, cache_dev_bytes)
+    memory_s = mem_bytes / HBM_BW
+
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda t: t[1])[0]
+    mf = model_flops(cfg, B, specs["tokens"].shape[1], mode) / CHIPS
+
+    dr = dryrun_db.get(f"{arch_id}|{shape_name}|single", {})
+    return {
+        "status": "ok",
+        "mode": mode,
+        "per_device_flops": totals["flops"],
+        "per_device_mem_bytes_analytic": mem_bytes,
+        "per_device_bytes_hlo_unfused_upper": totals["bytes"],
+        "per_device_collective_bytes": totals["collective_bytes"],
+        "per_device_param_bytes": params_dev_bytes,
+        "per_device_cache_bytes": cache_dev_bytes,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops_6ND_per_device": mf,
+        "useful_flops_ratio": mf / max(totals["flops"], 1.0),
+        "per_device_bytes_dryrun": dr.get("per_device_bytes", {}),
+        "per_group": per_group,
+    }
+
+
+def analyze_encdec(cfg, shape, mesh, dryrun_db, arch_id):
+    """Whisper: small model — lower the FULL model per mode (its 6+6
+    layers are scanned but tiny; we scale scan bodies by L analytically
+    via the per-group approach on the decoder blocks being homogeneous).
+    Simpler: full-model HLO cost + scan-correction factor L for the body
+    terms is within noise for a 72M model; we lower full and note it."""
+    from repro.launch.dryrun import lower_combo
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    mode = shape.kind
+    # full lowering (costs body once) — correct by multiplying the block
+    # share by n_layers is skipped; whisper contributes negligible load.
+    r = lower_combo(arch_id, shape.name, mesh)
+    if r["status"] != "ok":
+        return r
+    flops = r["cost_analysis"]["flops"]
+    byts = r["cost_analysis"]["bytes_accessed"]
+    coll = float(sum(r["collective_bytes_hlo_once"].values()))
+    # scan-body once -> scale by layer count as upper correction
+    scale = cfg.n_layers
+    flops, byts, coll = flops * scale, byts * scale, coll * scale
+    # cost_analysis is per-device; divide by per-chip peaks directly
+    compute_s = flops / PEAK_FLOPS
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = meshlib.param_pspecs(params_shapes, mesh)
+    params_dev_bytes = sharded_bytes(params_shapes, p_specs, mesh)
+    mem_bytes = analytic_memory_bytes(cfg, mesh, mode, shape.global_batch,
+                                      specs["tokens"].shape[1],
+                                      params_dev_bytes)
+    memory_s = mem_bytes / HBM_BW
+    coll_s = coll / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda t: t[1])[0]
+    B = shape.global_batch
+    s_txt = specs["tokens"].shape[1]
+    mf = model_flops(cfg, B, s_txt, mode) / CHIPS
+    return {
+        "status": "ok", "mode": mode, "note": "encdec full-lowering x L",
+        "per_device_flops": flops, "per_device_mem_bytes_analytic": mem_bytes,
+        "per_device_bytes_hlo_unfused_upper": byts,
+        "per_device_collective_bytes": coll,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops_6ND_per_device": mf,
+        "useful_flops_ratio": mf / max(flops, 1.0),
+        "per_device_bytes_dryrun": dryrun_db.get(
+            f"{arch_id}|{shape.name}|single", {}).get(
+                "per_device_bytes", {}),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--results", default=RESULTS)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    dryrun_db = {}
+    if os.path.exists(DRYRUN):
+        with open(DRYRUN) as f:
+            dryrun_db = json.load(f)
+
+    db = {}
+    if os.path.exists(args.results):
+        with open(args.results) as f:
+            db = json.load(f)
+
+    mesh = meshlib.make_production_mesh(multi_pod=False)
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" \
+        else args.shape.split(",")
+    for a in archs:
+        for s in shapes:
+            key = f"{a}|{s}"
+            if key in db and db[key].get("status") in ("ok", "skipped") \
+                    and not args.force:
+                print(f"[cached] {key}")
+                continue
+            print(f"[roofline] {key} ...", flush=True)
+            try:
+                db[key] = analyze_combo(a, s, mesh, dryrun_db)
+            except Exception as e:
+                db[key] = {"status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-1500:]}
+            st = db[key]["status"]
+            extra = "" if st != "ok" else \
+                f" dominant={db[key]['dominant']}" \
+                f" c={db[key]['compute_s']:.2e}s" \
+                f" m={db[key]['memory_s']:.2e}s" \
+                f" x={db[key]['collective_s']:.2e}s"
+            print(f"  -> {st}{extra}", flush=True)
+            os.makedirs(os.path.dirname(os.path.abspath(args.results)),
+                        exist_ok=True)
+            with open(args.results, "w") as f:
+                json.dump(db, f, indent=1)
+
+    n_ok = sum(1 for v in db.values() if v["status"] == "ok")
+    print(f"\nROOFLINE SUMMARY: ok={n_ok}/{len(db)}")
+
+
+if __name__ == "__main__":
+    main()

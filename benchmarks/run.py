@@ -1,0 +1,106 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * table1_*  — client TFLOPs (paper Table 1, VGG/CIFAR-10, analytic)
+  * table2_*  — client GB     (paper Table 2, ResNet-50/CIFAR-100)
+  * fig3_*    — accuracy-vs-client-flops (empirical smoke scale)
+  * privacy_* — distance-correlation leakage at two cut depths
+  * kernel_*  — Pallas kernel vs oracle max error + ref-path timing
+  * dryrun_* / roofline_* — summaries of cached results (run
+    launch/dryrun.py and benchmarks/roofline.py to refresh)
+
+Full protocol experiments live in benchmarks/paper_tables.py; the dry-run
+and roofline sweeps are separate entry points because they require the
+512-device XLA flag at process start.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    t_start = time.time()
+    print("name,us_per_call,derived")
+
+    # --- Tables 1 & 2 (analytic; instant) --------------------------------
+    from benchmarks.paper_tables import table1_rows, table2_rows
+    t0 = time.time()
+    for method, n, tf in table1_rows():
+        emit(f"table1_{method}_{n}clients", (time.time() - t0) * 1e6,
+             f"tflops_per_client={tf:.4f}")
+    t0 = time.time()
+    for method, n, gb in table2_rows():
+        emit(f"table2_{method}_{n}clients", (time.time() - t0) * 1e6,
+             f"gb_per_client={gb:.2f}")
+
+    # --- Fig. 3 (empirical smoke) ----------------------------------------
+    from benchmarks.paper_tables import fig3_accuracy_vs_flops
+    t0 = time.time()
+    curve = fig3_accuracy_vs_flops(rounds=20, n_clients=2)
+    us = (time.time() - t0) * 1e6
+    for method, tflops, acc in curve[-3:]:
+        emit(f"fig3_{method}_final", us / max(len(curve), 1),
+             f"client_tflops={tflops:.5f};accuracy={acc:.3f}")
+
+    # --- privacy leakage ---------------------------------------------------
+    import jax
+    from repro.core.privacy import distance_correlation
+    from repro.data.synthetic import image_batch
+    from repro.nn import convnets as C
+    cfg = C.CNNConfig(name="t", width_mult=0.5,
+                      plan=(16, "M", 32, "M", 64, "M"), n_classes=4)
+    params = C.vgg_init(jax.random.PRNGKey(0), cfg)
+    b = image_batch(jax.random.PRNGKey(1), 64, 4, hw=16)
+    for cut, tag in ((1, "shallow"), (6, "deep")):
+        t0 = time.time()
+        act = C.vgg_apply(params, cfg, b["images"], from_layer=0,
+                          to_layer=cut)
+        d = float(distance_correlation(b["images"], act))
+        emit(f"privacy_dcor_cut_{tag}", (time.time() - t0) * 1e6,
+             f"dcor={d:.3f}")
+
+    # --- kernels ------------------------------------------------------------
+    from benchmarks.kernels_bench import rows as kernel_rows
+    for name, us, derived in kernel_rows():
+        emit(name, us, derived)
+
+    # --- cached dry-run / roofline summaries --------------------------------
+    here = os.path.dirname(__file__)
+    dr_path = os.path.join(here, "..", "results", "dryrun.json")
+    if os.path.exists(dr_path):
+        with open(dr_path) as f:
+            db = json.load(f)
+        n_ok = sum(1 for v in db.values() if v["status"] == "ok")
+        n_skip = sum(1 for v in db.values() if v["status"] == "skipped")
+        n_err = sum(1 for v in db.values() if v["status"] == "error")
+        emit("dryrun_summary", 0.0,
+             f"ok={n_ok};skipped={n_skip};errors={n_err}")
+        worst = max((v for v in db.values() if v["status"] == "ok"),
+                    key=lambda v: v["per_device_bytes"]["arguments"])
+        emit("dryrun_max_per_device_args_gb", 0.0,
+             f"{worst['per_device_bytes']['arguments'] / 1e9:.2f}")
+    rf_path = os.path.join(here, "..", "results", "roofline.json")
+    if os.path.exists(rf_path):
+        with open(rf_path) as f:
+            db = json.load(f)
+        oks = {k: v for k, v in db.items() if v.get("status") == "ok"}
+        from collections import Counter
+        doms = Counter(v["dominant"] for v in oks.values())
+        emit("roofline_summary", 0.0,
+             ";".join(f"{k}_bound={n}" for k, n in sorted(doms.items())))
+        for k, v in sorted(oks.items()):
+            emit(f"roofline_{k.replace('|', '_')}", 0.0,
+                 f"c={v['compute_s']:.2e};m={v['memory_s']:.2e};"
+                 f"x={v['collective_s']:.2e};dom={v['dominant']}")
+
+    print(f"# total_wall_s={time.time() - t_start:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Pytree checkpointing: flat-path npz with dtype/shape manifest.
+
+Sharding-aware restore: arrays are loaded host-side and device_put against
+a target sharding map if provided (so a checkpoint written on one mesh can
+be restored onto another — the standard resharding-restore pattern)."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import module as nn
+
+_SEP = "/"
+
+
+def _flatten(params):
+    flat = {}
+    for (path, leaf) in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = _SEP.join(nn._path_elem_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, params, step: int | None = None, extra: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    manifest = {
+        "step": step,
+        "extra": extra or {},
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+    }
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, template, sharding_map=None):
+    """template: pytree with the target structure (e.g. fresh init or
+    ShapeDtypeStructs).  sharding_map: optional pytree of shardings."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    paths = []
+    for (p, _) in jax.tree_util.tree_flatten_with_path(template)[0]:
+        paths.append(_SEP.join(nn._path_elem_str(e) for e in p))
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    shardings = (jax.tree_util.tree_leaves(sharding_map)
+                 if sharding_map is not None else [None] * len(leaves))
+    out = []
+    for key, tmpl, shd in zip(paths, leaves, shardings):
+        arr = npz[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"ckpt leaf {key}: {arr.shape} != {tmpl.shape}")
+        a = jnp.asarray(arr, dtype=tmpl.dtype)
+        if shd is not None:
+            a = jax.device_put(a, shd)
+        out.append(a)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def load_manifest(path: str) -> dict:
+    with open(path.removesuffix(".npz") + ".json") as f:
+        return json.load(f)

@@ -1,0 +1,3 @@
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, ArchConfig,
+                                InputShape, all_configs,
+                                get_config)  # noqa: F401

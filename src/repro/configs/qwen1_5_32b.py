@@ -1,0 +1,10 @@
+"""Qwen1.5-32B [hf:Qwen/Qwen1.5-0.5B family scaling] — dense, QKV bias."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40, head_dim=128,
+    d_ff=27392, vocab=152064, qkv_bias=True,
+    long_window=8192,          # long-context sliding-window variant
+    default_cut=4,
+    source="hf:Qwen/Qwen1.5-0.5B (family card, scaled per assignment)")

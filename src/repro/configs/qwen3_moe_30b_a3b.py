@@ -1,0 +1,11 @@
+"""Qwen3-30B-A3B [hf:Qwen/Qwen3-30B-A3B] — 128 experts top-8."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=768, vocab=151936,
+    n_experts=128, top_k=8,
+    long_window=8192,
+    default_cut=4,
+    source="hf:Qwen/Qwen3-30B-A3B")

@@ -1,0 +1,3 @@
+"""SplitNN — the paper's primary contribution (cut-layer distributed
+training) plus its comparison baselines and resource/privacy meters."""
+from repro.core import accounting, baselines, privacy, protocol, split  # noqa: F401

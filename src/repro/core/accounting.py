@@ -1,0 +1,197 @@
+"""Resource accounting: client-side FLOPs + communication bytes.
+
+Two modes:
+  * empirical — `flops_of_fn` asks XLA's cost model for the FLOPs of a
+    jitted function (used by the live protocol meters);
+  * analytic — closed-form costs for the paper's exact setups (VGG-16 on
+    CIFAR-10, ResNet-50 on CIFAR-100), reproducing Tables 1 and 2.
+
+Formulas (per client, matching the paper's setting: dataset of size
+`n_total` split over `K` clients, `epochs` passes, fp32 wires):
+
+  fedavg_flops  = 3 * F_full * (n_total / K) * epochs     (fwd+bwd, all layers)
+  lbsgd_flops   = same as fedavg (every client computes the full model)
+  splitnn_flops = 3 * F_client * (n_total / K) * epochs   (layers < cut only)
+
+  fedavg_bytes  = 2 * P_full  * rounds                    (pull + push model)
+  lbsgd_bytes   = 2 * P_full  * steps                     (grad sync each step)
+  splitnn_bytes = 2 * A_cut * (n_total / K) * epochs      (acts up, grads down)
+                  + 2 * P_client * turns_per_client       (p2p weight sync)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as nn
+
+
+def flops_of_fn(fn, *args) -> float:
+    """XLA cost-model FLOPs of fn(*args) (per call)."""
+    lowered = jax.jit(fn).lower(*args)
+    cost = lowered.compile().cost_analysis()
+    if isinstance(cost, list):            # older jax returns [dict]
+        cost = cost[0]
+    return float(cost.get("flops", 0.0))
+
+
+def bytes_of_tree(tree) -> int:
+    return nn.param_bytes(tree)
+
+
+class Meter:
+    """Per-client cumulative resource meters."""
+
+    def __init__(self, n_clients: int):
+        self.flops = [0.0] * n_clients
+        self.bytes_up = [0] * n_clients
+        self.bytes_down = [0] * n_clients
+        self.sync_bytes = [0] * n_clients
+
+    def add_flops(self, ci, f):
+        self.flops[ci] += f
+
+    def add_wires(self, ci, wires):
+        for w in wires:
+            if w.direction == "up":
+                self.bytes_up[ci] += w.bytes
+            else:
+                self.bytes_down[ci] += w.bytes
+
+    def add_sync_bytes(self, ci, params):
+        self.sync_bytes[ci] += bytes_of_tree(params)
+
+    def totals(self) -> dict:
+        return {
+            "client_tflops": [f / 1e12 for f in self.flops],
+            "client_gb": [(u + d + s) / 1e9 for u, d, s in
+                          zip(self.bytes_up, self.bytes_down,
+                              self.sync_bytes)],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Analytic costs for the paper's architectures
+# ---------------------------------------------------------------------------
+
+def vgg16_flops_per_sample(hw: int = 32, in_ch: int = 3,
+                           upto_layer: int | None = None) -> float:
+    """Forward FLOPs (multiply-add = 2 flops) of VGG-16 conv layers on
+    hw x hw inputs; `upto_layer` counts only the first k conv/pool
+    entries (the split-learning client share)."""
+    from repro.nn.convnets import VGG16_PLAN
+    plan = VGG16_PLAN if upto_layer is None else VGG16_PLAN[:upto_layer]
+    flops = 0.0
+    ch, size = in_ch, hw
+    for item in plan:
+        if item == "M":
+            size //= 2
+        else:
+            flops += 2.0 * 9 * ch * item * size * size
+            ch = item
+    if upto_layer is None:
+        flops += 2.0 * ch * 512 + 2.0 * 512 * 10     # classifier
+    return flops
+
+
+def vgg16_param_count() -> int:
+    from repro.nn.convnets import VGG16_PLAN
+    params, ch = 0, 3
+    for item in VGG16_PLAN:
+        if item != "M":
+            params += 9 * ch * item + item
+            ch = item
+    params += ch * 512 + 512 + 512 * 10 + 10
+    return params
+
+
+def resnet50_flops_per_sample(hw: int = 32) -> float:
+    """Canonical ResNet-50 cost scaled to CIFAR inputs: ~4.1 GFLOPs at
+    224^2 -> scale by (hw/224)^2 (spatial convs dominate)."""
+    return 4.1e9 * 2 * (hw / 224.0) ** 2 / 2  # 4.1 GMACs -> flops at 224
+
+
+def resnet50_param_count() -> int:
+    return 25_557_032
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolCost:
+    """Closed-form per-client resource costs for one training run."""
+    n_total: int            # dataset size
+    n_clients: int
+    epochs: int
+    full_flops_fwd: float   # per-sample forward flops, whole model
+    client_flops_fwd: float  # per-sample forward flops, client share
+    param_bytes_full: int
+    param_bytes_client: int
+    cut_act_bytes: int      # bytes of the cut activation per sample
+    rounds: int | None = None   # fedavg sync rounds (default = epochs)
+    steps: int | None = None    # lbsgd steps (default = epochs * n_local)
+    label_bytes: int = 4
+
+    @property
+    def n_local(self) -> int:
+        return self.n_total // self.n_clients
+
+    def fedavg(self) -> dict:
+        r = self.rounds if self.rounds is not None else self.epochs
+        return {
+            "tflops": 3 * self.full_flops_fwd * self.n_local
+                      * self.epochs / 1e12,
+            "gb": 2 * self.param_bytes_full * r / 1e9,
+        }
+
+    def lbsgd(self) -> dict:
+        # sync-SGD all-reduces every local step (local batch 32)
+        steps = self.steps if self.steps is not None \
+            else self.epochs * max(2, self.n_local // 32)
+        return {
+            "tflops": 3 * self.full_flops_fwd * self.n_local
+                      * self.epochs / 1e12,
+            "gb": 2 * self.param_bytes_full * steps / 1e9,
+        }
+
+    def splitnn(self, *, sync: str = "p2p") -> dict:
+        wire = 2 * self.cut_act_bytes * self.n_local * self.epochs \
+            + self.label_bytes * self.n_local * self.epochs
+        if sync == "p2p":
+            wire += 2 * self.param_bytes_client * self.epochs
+        return {
+            "tflops": 3 * self.client_flops_fwd * self.n_local
+                      * self.epochs / 1e12,
+            "gb": wire / 1e9,
+        }
+
+
+def paper_table1_setup(n_clients: int, *, epochs: int = 100,
+                       cut_layer: int = 1) -> ProtocolCost:
+    """VGG-16 / CIFAR-10 (50k samples), cut after `cut_layer` conv layers
+    (the paper's client share is tiny — cut right after the first conv)."""
+    act_ch = 64                                   # channels at the cut
+    act_bytes = 32 * 32 * act_ch * 4
+    client_params = 9 * 3 * 64 + 64
+    if cut_layer >= 2:
+        client_params += 9 * 64 * 64 + 64
+    return ProtocolCost(
+        n_total=50_000, n_clients=n_clients, epochs=epochs,
+        full_flops_fwd=vgg16_flops_per_sample(),
+        client_flops_fwd=vgg16_flops_per_sample(upto_layer=cut_layer),
+        param_bytes_full=vgg16_param_count() * 4,
+        param_bytes_client=client_params * 4,
+        cut_act_bytes=act_bytes)
+
+
+def paper_table2_setup(n_clients: int, *, epochs: int = 100) -> ProtocolCost:
+    """ResNet-50 / CIFAR-100 (50k samples), cut after the stem stage."""
+    act_bytes = 32 * 32 * 64 * 4                  # stem output fp32
+    stem_params = 9 * 3 * 64 + 64
+    return ProtocolCost(
+        n_total=50_000, n_clients=n_clients, epochs=epochs,
+        full_flops_fwd=resnet50_flops_per_sample(),
+        client_flops_fwd=2.0 * 9 * 3 * 64 * 32 * 32,
+        param_bytes_full=resnet50_param_count() * 4,
+        param_bytes_client=stem_params * 4,
+        cut_act_bytes=act_bytes)

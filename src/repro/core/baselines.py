@@ -1,0 +1,117 @@
+"""Baselines the paper compares against: federated averaging (McMahan et
+al. 2017) and large-batch synchronous SGD (Chen et al. 2016)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accounting import Meter, bytes_of_tree, flops_of_fn
+from repro.optim import apply_updates
+
+
+def tree_mean(trees: list):
+    return jax.tree_util.tree_map(
+        lambda *xs: sum(xs[1:], xs[0]) / len(xs), *trees)
+
+
+@dataclasses.dataclass
+class FedAvgTrainer:
+    """Each round: every client trains `local_steps` full-model SGD steps
+    on local data, then the server averages the models."""
+    init_fn: Callable            # key -> params
+    apply_fn: Callable           # (params, x) -> logits
+    loss_fn: Callable
+    optimizer: "Optimizer"
+    n_clients: int
+    local_steps: int = 1
+
+    def __post_init__(self):
+        self.meter = Meter(self.n_clients)
+        self._flops_per_batch = None
+
+    def init(self, key):
+        params = self.init_fn(key)
+        return {"global": params,
+                "opt": [self.optimizer.init(params)
+                        for _ in range(self.n_clients)]}
+
+    def _local_loss(self, params, batch):
+        return self.loss_fn(self.apply_fn(params, batch["x"]),
+                            batch["labels"])
+
+    def train_round(self, state, client_batches: list[dict]):
+        locals_, losses = [], []
+        for ci, batch in enumerate(client_batches):
+            p = state["global"]
+            # model pull
+            self.meter.bytes_down[ci] += bytes_of_tree(p)
+            opt = state["opt"][ci]
+            for _ in range(self.local_steps):
+                loss, g = jax.value_and_grad(self._local_loss)(p, batch)
+                if self._flops_per_batch is None:
+                    fwd = flops_of_fn(
+                        lambda pp, xx: self.apply_fn(pp, xx),
+                        p, batch["x"])
+                    self._flops_per_batch = 3.0 * fwd
+                self.meter.add_flops(ci, self._flops_per_batch)
+                ups, opt = self.optimizer.update(g, opt, p)
+                p = apply_updates(p, ups)
+            state["opt"][ci] = opt
+            # model push
+            self.meter.bytes_up[ci] += bytes_of_tree(p)
+            locals_.append(p)
+            losses.append(loss)
+        state["global"] = tree_mean(locals_)
+        return state, jnp.stack(losses).mean()
+
+    def evaluate(self, state, batch):
+        logits = self.apply_fn(state["global"], batch["x"])
+        return (jnp.argmax(logits, -1) == batch["labels"]).mean()
+
+
+@dataclasses.dataclass
+class LargeBatchSGDTrainer:
+    """Synchronous data-parallel SGD: every step, every client computes a
+    full-model gradient on its shard; gradients are all-reduced."""
+    init_fn: Callable
+    apply_fn: Callable
+    loss_fn: Callable
+    optimizer: "Optimizer"
+    n_clients: int
+
+    def __post_init__(self):
+        self.meter = Meter(self.n_clients)
+        self._flops_per_batch = None
+
+    def init(self, key):
+        params = self.init_fn(key)
+        return {"global": params, "opt": self.optimizer.init(params)}
+
+    def train_step(self, state, client_batches: list[dict]):
+        grads, losses = [], []
+        p = state["global"]
+        for ci, batch in enumerate(client_batches):
+            loss, g = jax.value_and_grad(
+                lambda pp: self.loss_fn(self.apply_fn(pp, batch["x"]),
+                                        batch["labels"]))(p)
+            if self._flops_per_batch is None:
+                fwd = flops_of_fn(lambda pp, xx: self.apply_fn(pp, xx),
+                                  p, batch["x"])
+                self._flops_per_batch = 3.0 * fwd
+            self.meter.add_flops(ci, self._flops_per_batch)
+            # grad push + model pull (ring all-reduce ~ 2x param bytes)
+            self.meter.bytes_up[ci] += bytes_of_tree(g)
+            self.meter.bytes_down[ci] += bytes_of_tree(p)
+            grads.append(g)
+            losses.append(loss)
+        g_mean = tree_mean(grads)
+        ups, state["opt"] = self.optimizer.update(g_mean, state["opt"], p)
+        state["global"] = apply_updates(p, ups)
+        return state, jnp.stack(losses).mean()
+
+    def evaluate(self, state, batch):
+        logits = self.apply_fn(state["global"], batch["x"])
+        return (jnp.argmax(logits, -1) == batch["labels"]).mean()

@@ -1,0 +1,151 @@
+"""Multi-client split-learning protocol (Gupta & Raskar 2018 scheduling).
+
+N clients, one server.  Clients take turns (round-robin over local
+batches); between turns, client weights move either peer-to-peer
+("p2p" — the next client pulls the last trained client weights, counted
+as client-side communication) or not at all ("none").  The server's
+segment updates every step.  Meters accumulate per-client FLOPs and
+wire bytes so the Fig.3 / Tables 1-2 comparisons come from the same
+run loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import split as sp
+from repro.core.accounting import Meter, flops_of_fn
+from repro.optim import apply_updates
+
+
+@dataclasses.dataclass
+class SplitTrainer:
+    model: sp.SegModel
+    cut: int
+    loss_fn: Callable
+    optimizer_client: "Optimizer"
+    optimizer_server: "Optimizer"
+    n_clients: int
+    sync: str = "p2p"                       # "p2p" | "none"
+
+    def __post_init__(self):
+        self.meter = Meter(self.n_clients)
+        self._client_flops_per_batch = None
+
+    def init(self, key):
+        kc, ks = jax.random.split(key)
+        full = self.model.init(kc)
+        params_c = self.model.param_slice(full, 0, self.cut)
+        params_s = self.model.param_slice(full, self.cut,
+                                          self.model.n_segments)
+        # every client starts from the same init (paper setting)
+        clients = [jax.tree_util.tree_map(lambda x: x, params_c)
+                   for _ in range(self.n_clients)]
+        opt_c = [self.optimizer_client.init(c) for c in clients]
+        opt_s = self.optimizer_server.init(params_s)
+        return {"clients": clients, "server": params_s,
+                "opt_c": opt_c, "opt_s": opt_s, "last_trained": -1}
+
+    def train_round(self, state, client_batches: list[dict]):
+        """One round = each client takes one turn (its local batch)."""
+        losses = []
+        for ci, batch in enumerate(client_batches):
+            state, loss = self.client_turn(state, ci, batch)
+            losses.append(loss)
+        return state, jnp.stack(losses).mean()
+
+    def client_turn(self, state, ci: int, batch):
+        x, y = batch["x"], batch["labels"]
+        # --- weight sync from previously trained client ------------------
+        if self.sync == "p2p" and state["last_trained"] >= 0 \
+                and state["last_trained"] != ci:
+            src = state["last_trained"]
+            state["clients"][ci] = jax.tree_util.tree_map(
+                lambda a: a, state["clients"][src])
+            self.meter.add_sync_bytes(ci, state["clients"][ci])
+
+        wires: list = []
+        loss, g_c, g_s, wires = sp.vanilla_split_grads(
+            self.model, self.cut, state["clients"][ci], state["server"],
+            x, y, self.loss_fn, wires)
+        self.meter.add_wires(ci, wires)
+        self._meter_flops(ci, state, x)
+
+        ups_c, state["opt_c"][ci] = self.optimizer_client.update(
+            g_c, state["opt_c"][ci], state["clients"][ci])
+        state["clients"][ci] = apply_updates(state["clients"][ci], ups_c)
+        ups_s, state["opt_s"] = self.optimizer_server.update(
+            g_s, state["opt_s"], state["server"])
+        state["server"] = apply_updates(state["server"], ups_s)
+        state["last_trained"] = ci
+        return state, loss
+
+    def _meter_flops(self, ci, state, x):
+        if self._client_flops_per_batch is None:
+            fwd = flops_of_fn(
+                lambda p, xi: self.model.apply_range(p, xi, 0, self.cut),
+                state["clients"][ci], x)
+            # fwd + bwd ~= 3x fwd (standard accounting, as in the paper)
+            self._client_flops_per_batch = 3.0 * fwd
+        self.meter.add_flops(ci, self._client_flops_per_batch)
+
+    def evaluate(self, state, batch, *, client: int = 0):
+        act = self.model.apply_range(state["clients"][client], batch["x"],
+                                     0, self.cut)
+        if sp._takes_offset(self.model):
+            logits = self.model.apply_range(
+                state["server"], act, self.cut, self.model.n_segments,
+                offset=self.cut)
+        else:
+            logits = self.model.apply_range(
+                state["server"], act, self.cut, self.model.n_segments)
+        return (jnp.argmax(logits, -1) == batch["labels"]).mean()
+
+
+@dataclasses.dataclass
+class UShapedTrainer:
+    """Label-private variant: loss computed on the client."""
+    model: sp.SegModel
+    cut1: int
+    cut2: int
+    loss_fn: Callable
+    optimizer: "Optimizer"
+    n_clients: int
+
+    def __post_init__(self):
+        self.meter = Meter(self.n_clients)
+
+    def init(self, key):
+        full = self.model.init(key)
+        head = self.model.param_slice(full, 0, self.cut1)
+        mid = self.model.param_slice(full, self.cut1, self.cut2)
+        tail = self.model.param_slice(full, self.cut2,
+                                      self.model.n_segments)
+        clients = [{"head": jax.tree_util.tree_map(lambda x: x, head),
+                    "tail": jax.tree_util.tree_map(lambda x: x, tail)}
+                   for _ in range(self.n_clients)]
+        opt = {
+            "clients": [self.optimizer.init(c) for c in clients],
+            "server": self.optimizer.init(mid),
+        }
+        return {"clients": clients, "server": mid, "opt": opt}
+
+    def client_turn(self, state, ci: int, batch):
+        wires: list = []
+        loss, g_head, g_mid, g_tail, wires = sp.u_shaped_grads(
+            self.model, self.cut1, self.cut2,
+            state["clients"][ci]["head"], state["server"],
+            state["clients"][ci]["tail"], batch["x"], batch["labels"],
+            self.loss_fn, wires)
+        self.meter.add_wires(ci, wires)
+        g_client = {"head": g_head, "tail": g_tail}
+        ups_c, state["opt"]["clients"][ci] = self.optimizer.update(
+            g_client, state["opt"]["clients"][ci], state["clients"][ci])
+        state["clients"][ci] = apply_updates(state["clients"][ci], ups_c)
+        ups_s, state["opt"]["server"] = self.optimizer.update(
+            g_mid, state["opt"]["server"], state["server"])
+        state["server"] = apply_updates(state["server"], ups_s)
+        return state, loss

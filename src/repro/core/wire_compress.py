@@ -1,0 +1,54 @@
+"""Cut-layer wire compression (beyond-paper; the paper's §4 names neural
+compression of the wire as future work).
+
+`quantized_wire` is an int8 fake-quant identity placed AT THE CUT: the
+forward activation and the backward cut-gradient are both squeezed
+through per-row symmetric int8 (max-abs scaling).  In the distributed
+protocol this is exactly a 4× (fp32) / 2× (bf16) wire-byte reduction in
+BOTH directions; in-graph it is the faithful simulation (values that
+cross carry int8 information content).
+
+Straight-through is NOT needed: the quantizer is applied to the VALUES
+crossing the wire, so the client backprops the *quantized* cut gradient,
+exactly as the real protocol would.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _fake_quant_int8(x):
+    """Per-last-axis-row symmetric int8 quantize-dequantize."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127)
+    return (q * scale).astype(x.dtype)
+
+
+@jax.custom_vjp
+def quantized_wire(x):
+    return _fake_quant_int8(x)
+
+
+def _fwd(x):
+    return _fake_quant_int8(x), None
+
+
+def _bwd(_, g):
+    return (_fake_quant_int8(g),)
+
+
+quantized_wire.defvjp(_fwd, _bwd)
+
+
+def wire_bytes(shape, *, quantized: bool, base_dtype=jnp.bfloat16) -> int:
+    """Bytes on the physical wire for one payload of `shape`."""
+    n = 1
+    for s in shape:
+        n *= s
+    if quantized:
+        rows = n // shape[-1]
+        return n * 1 + rows * 4          # int8 payload + fp32 row scales
+    return n * jnp.dtype(base_dtype).itemsize

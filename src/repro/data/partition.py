@@ -1,0 +1,53 @@
+"""Client-side data partitioning for split/federated protocols.
+
+Horizontal: each client holds different *samples* (the paper's Fig. 1 —
+many small radiology centers).  Vertical: each client holds different
+*features/modalities* of the same samples (the paper's §2 third config).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def horizontal_partition(batch: dict, n_clients: int) -> list[dict]:
+    """Split the leading (sample) axis across clients."""
+    n = next(iter(batch.values())).shape[0]
+    per = n // n_clients
+    assert per > 0, f"batch {n} too small for {n_clients} clients"
+    return [
+        {k: v[i * per:(i + 1) * per] for k, v in batch.items()}
+        for i in range(n_clients)
+    ]
+
+
+def vertical_partition(batch: dict, modality_keys: list[str],
+                       label_holder: int = 0) -> list[dict]:
+    """One client per modality key; samples are aligned (same patients).
+    Labels ride with `label_holder`'s shard (or the server in U-shape)."""
+    out = []
+    for i, k in enumerate(modality_keys):
+        shard = {k: batch[k]}
+        if i == label_holder and "labels" in batch:
+            shard["labels"] = batch["labels"]
+        out.append(shard)
+    return out
+
+
+def dirichlet_label_skew(key, labels: jnp.ndarray, n_clients: int,
+                         alpha: float = 0.5) -> list[jnp.ndarray]:
+    """Non-IID horizontal split: per-class Dirichlet allocation over
+    clients (the standard federated-learning heterogeneity knob).
+    Returns a list of index arrays (variable length, python-side)."""
+    import numpy as np
+    labels = np.asarray(labels)
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    client_idx: list[list[int]] = [[] for _ in range(n_clients)]
+    for c in np.unique(labels):
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props)[:-1] * len(idx)).astype(int)
+        for ci, part in enumerate(np.split(idx, cuts)):
+            client_idx[ci].extend(part.tolist())
+    return [jnp.asarray(sorted(ix)) for ix in client_idx]

@@ -1,0 +1,45 @@
+"""Batching / host-side pipeline with device sharding hooks."""
+from __future__ import annotations
+
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+
+class DataPipeline:
+    """Wraps a batch-generator with global-batch sharding for pjit.
+
+    `shard_fn` places each host batch with jax.device_put against the
+    mesh sharding (identity on single-device CPU)."""
+
+    def __init__(self, gen: Iterator[dict], shard_fn: Callable | None = None,
+                 prefetch: int = 2):
+        self._gen = gen
+        self._shard = shard_fn or (lambda b: b)
+        self._buf: list[dict] = []
+        self._prefetch = prefetch
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        while len(self._buf) < self._prefetch:
+            self._buf.append(self._shard(next(self._gen)))
+        return self._buf.pop(0)
+
+
+def sharded_put(mesh, pspec_map: dict):
+    """Returns shard_fn placing batch[k] with NamedSharding(mesh, pspec)."""
+    from jax.sharding import NamedSharding
+
+    def fn(batch):
+        out = {}
+        for k, v in batch.items():
+            spec = pspec_map.get(k)
+            if spec is None:
+                out[k] = v
+            else:
+                out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+        return out
+    return fn

@@ -1,0 +1,120 @@
+"""Blockwise (flash) attention Pallas kernel — causal + sliding window.
+
+Online-softmax attention tiled for VMEM: grid (B, H, nQ, nKV) with the KV
+axis innermost; running max m, normalizer l and fp32 accumulator persist
+in scratch across the sequential KV steps (TPU grids execute
+minor-to-major, which is what makes cross-step scratch carry legal).
+
+Tiling: q block (bQ × D), kv blocks (bKV × D); D (head dim) rides whole
+in the lane dimension (128 for every assigned arch — MXU-aligned).
+Causality/window are handled by masking inside the block; fully-masked
+KV blocks are skipped via @pl.when on the block indices (the TPU grid
+still schedules them, but they cost no MXU work).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_kv: int, n_kv: int,
+                  causal: bool, window: int | None):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # skip blocks that are entirely masked
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run,
+                              k_start + block_kv - 1 > q_start - window)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bKV, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 1)
+        mask = jnp.ones((block_q, block_kv), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (bQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: int | None = None,
+                           scale: float | None = None,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False):
+    """q,k,v: (B, S, H, D) with equal head counts (wrapper in ops.py
+    expands GQA).  Returns (B, S, H, D)."""
+    B, S, H, D = q.shape
+    scale = scale if scale is not None else float(1.0 / (D ** 0.5))
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    assert S % block_q == 0 and S % block_kv == 0
+
+    # kernel layout: (B, H, S, D)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    n_q, n_kv = S // block_q, S // block_kv
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                          block_kv=block_kv, n_kv=n_kv, causal=causal,
+                          window=window),
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),     # m
+            pltpu.VMEM((block_q, 1), jnp.float32),     # l
+            pltpu.VMEM((block_q, D), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,59 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container kernels execute in interpret mode (the TPU lowering
+path is identical modulo `interpret=`); `KERNEL_INTERPRET` flips the
+default.  GQA head expansion for flash attention happens here, not in the
+kernel (the kernel requires equal head counts).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.splitcat_linear import splitcat_linear_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+INTERPRET = os.environ.get("KERNEL_INTERPRET", "1") == "1"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, interpret: bool | None = None):
+    return rmsnorm_pallas(x, scale, eps=eps,
+                          interpret=INTERPRET if interpret is None
+                          else interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def splitcat_linear(parts, w, b=None, *, interpret: bool | None = None):
+    return splitcat_linear_pallas(list(parts), w, b,
+                                  interpret=INTERPRET if interpret is None
+                                  else interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool | None = None):
+    """q: (B,S,H,D); k,v: (B,S,K,D) with H % K == 0 (GQA expanded here)."""
+    H, K = q.shape[2], k.shape[2]
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_kv=block_kv,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64,
+             interpret: bool | None = None):
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                           interpret=INTERPRET if interpret is None
+                           else interpret)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def splitcat_linear_ref(parts: list, w, b=None):
+    """concat(parts, -1) @ w (+ b) — the vertical-split server entry op."""
+    x = jnp.concatenate(parts, axis=-1)
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(parts[0].dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int | None = None, scale: float | None = None):
+    """q,k,v: (B, S, H, D) (equal head counts).  fp32 softmax."""
+    B, S, H, D = q.shape
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w_ = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w_, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Naive O(S) recurrence oracle for the SSD kernel.
+    x: (B,S,H,P) dt: (B,S,H) A: (H,) Bm/Cm: (B,S,G,N) -> (B,S,H,P)."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp                  # (B,H,P),(B,H),(B,G,N)x2
+        Bh = jnp.repeat(B_t, rep, axis=1)
+        Ch = jnp.repeat(C_t, rep, axis=1)
+        da = jnp.exp(dt_t * A[None, :])
+        xd = x_t * dt_t[..., None]
+        state = state * da[:, :, None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xd.astype(jnp.float32), Bh.astype(jnp.float32))
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(jnp.float32))
+        return state, y
+
+    init = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2, 3), Cm.transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

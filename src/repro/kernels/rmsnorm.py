@@ -1,0 +1,51 @@
+"""Fused RMSNorm Pallas kernel.
+
+Memory-bound op: fusing the square-mean-rsqrt-scale chain into one VMEM
+pass halves HBM traffic vs the unfused XLA sequence.  Tiling: rows are
+blocked (block_rows × d) with d kept whole in the lane dimension (d is a
+multiple of 128 for every assigned arch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)               # (bR, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+                   interpret: bool = False):
+    """x: (..., D); scale: (D,)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = x.size // d
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    # pad rows to a multiple of block_rows
+    pad = (-rows) % block_rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    n_blocks = x2.shape[0] // block_rows
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, scale.reshape(1, d))
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

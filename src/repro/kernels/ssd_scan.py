@@ -1,0 +1,103 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060, Listing 1): the
+GPU version leans on warp-level matmuls per chunk; here each grid step
+owns one (batch·head, chunk) tile, computes the intra-chunk quadratic
+term on the MXU, and carries the running inter-chunk state (P × N) in
+VMEM scratch across the sequential chunk axis — the TPU-native way to
+express the chunk recurrence (grid minor-to-major order guarantees the
+carry is visited in chunk order).
+
+Layouts per grid step (chunk Q, head dim P, state N):
+    x (Q, P)  dt (Q, 1)  B (Q, N)  C (Q, N)  -> y (Q, P)
+    scratch: state (P, N) fp32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)                  # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)                # (Q, 1)
+    A = a_ref[0, 0]                                   # scalar (this head)
+    Bm = b_ref[0].astype(jnp.float32)                 # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)                 # (Q, N)
+
+    dA = dt * A                                       # (Q, 1), negative
+    cum = jnp.cumsum(dA, axis=0)                      # (Q, 1)
+    xd = x * dt                                       # (Q, P)
+
+    # intra-chunk: y[t] = sum_{s<=t} (C_t·B_s) exp(cum_t - cum_s) xd_s
+    seg = cum - cum.T                                 # (Qt, Qs)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    # mask before exp (overflow + where-grad NaN trap; see nn/ssm.py)
+    decay = jnp.exp(jnp.where(mask, seg, -1e30))
+    cb = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)   # (Qt, Qs)
+    y = jnp.dot(cb * decay, xd, preferred_element_type=jnp.float32)
+
+    # inter-chunk: y[t] += C_t · (exp(cum_t) * state_in)
+    state_in = state_ref[...]                         # (P, N) fp32
+    y += jnp.exp(cum) * jnp.dot(Cm, state_in.T,
+                                preferred_element_type=jnp.float32)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    # state update: state_out = exp(cum_Q) * state_in + sum_s exp(cum_Q -
+    # cum_s) xd_s B_s^T
+    total = cum[-1:, :]                               # (1,1)
+    w = jnp.exp(total - cum)                          # (Q,1)
+    state_ref[...] = jnp.exp(total)[0, 0] * state_in + jnp.dot(
+        (w * xd).T, Bm, preferred_element_type=jnp.float32)
+
+
+def ssd_scan_pallas(x, dt, A, Bm, Cm, *, chunk: int = 64,
+                    interpret: bool = False):
+    """x: (B,S,H,P) dt: (B,S,H) A: (H,) Bm/Cm: (B,S,G,N) -> (B,S,H,P).
+
+    The wrapper flattens (B, H) into the first grid axis and expands the
+    G state groups to H (GQA-style repetition handled by gather)."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    assert S % chunk == 0
+    nc = S // chunk
+
+    # (B,S,H,*) -> (B*H, S, *)
+    xf = x.transpose(0, 2, 1, 3).reshape(Bsz * H, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(Bsz * H, S, 1)
+    # expand groups to heads: head h uses group h // rep
+    Bh = jnp.repeat(Bm, rep, axis=2).transpose(0, 2, 1, 3).reshape(
+        Bsz * H, S, N)
+    Ch = jnp.repeat(Cm, rep, axis=2).transpose(0, 2, 1, 3).reshape(
+        Bsz * H, S, N)
+    Af = jnp.tile(A.reshape(1, H), (Bsz, 1)).reshape(Bsz * H, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(Bsz * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, 1), lambda g, c: (g, 0)),
+            pl.BlockSpec((1, chunk, N), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda g, c: (g, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda g, c: (g, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz * H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, Af, Bh, Ch)
+    return out.reshape(Bsz, H, S, P).transpose(0, 2, 1, 3)

@@ -1,0 +1,3 @@
+# NOTE: do not import dryrun here — it sets XLA_FLAGS device-count=512 at
+# import time and must only ever be imported as the program entry point.
+from repro.launch import mesh  # noqa: F401

@@ -1,0 +1,245 @@
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+MUST be imported/run before any other jax usage: the first two lines give
+the host 512 placeholder devices so jax.make_mesh can build the
+production meshes.  Do NOT set this env var anywhere else.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch import mesh as meshlib
+from repro.models import build_model, input_specs, supports_shape
+
+RESULTS = os.environ.get("DRYRUN_RESULTS",
+                         os.path.join(os.path.dirname(__file__),
+                                      "../../..", "results", "dryrun.json"))
+
+_COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=\s*(\w+)\[([^\]]*)\]")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "pred": 1, "s8": 1, "u8": 1, "f8": 1,
+                "s16": 2, "u16": 2}
+
+
+def collective_bytes_of_hlo(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO text.
+    NOTE: ops inside while (scan) bodies appear ONCE here; callers that
+    need executed-bytes must scale by trip count (benchmarks.roofline
+    does this per-layer)."""
+    out = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        kind = m.group(1)
+        shape_str = m.group(3)
+        # shape like "bf16[4,128,256]{...}" possibly tuple — grab dims
+        total = 0
+        for dt, dims in re.findall(r"(\w+)\[([\d,]*)\]", m.group(0)):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+def _loss_sharding(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_train_step(model, opt):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, remat=True))(params)
+        grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
+        ups, opt_state = opt.update(grads, opt_state, params)
+        params = optim.apply_updates(params, ups)
+        return params, opt_state, loss
+    return train_step
+
+
+def build_prefill_step(model):
+    def prefill_step(params, batch):
+        logits = model.forward(params, batch)
+        return logits[:, -1:, :]            # next-token logits
+    return prefill_step
+
+
+def build_serve_step(model):
+    def serve_step(params, tokens, caches):
+        return model.decode_step(params, tokens, caches)
+    return serve_step
+
+
+def lower_combo(arch_id: str, shape_name: str, mesh, *,
+                extra_info: bool = False,
+                fsdp: bool = os.environ.get("REPRO_FSDP", "0") == "1"):
+    """Lower + compile one (arch, shape, mesh).  Returns result dict."""
+    cfg = get_config(arch_id)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+
+    long_ctx = shape_name == "long_500k"
+    model = build_model(cfg, long_context=long_ctx)
+    specs = input_specs(cfg, shape)
+    key = jax.random.PRNGKey(0)
+
+    params_shapes = jax.eval_shape(model.init, key)
+    p_sh = meshlib.param_shardings(params_shapes, mesh, fsdp=fsdp)
+    b_sh = meshlib.batch_shardings(specs, mesh)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt = optim.adamw(3e-4)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        o_ps = meshlib.opt_pspecs(
+            opt_shapes, meshlib.param_pspecs(params_shapes, mesh,
+                                             fsdp=fsdp))
+        o_sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), o_ps)
+        step = build_train_step(model, opt)
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, _loss_sharding(mesh)))
+        with mesh:
+            lowered = jitted.lower(params_shapes, opt_shapes, specs)
+    elif shape.kind == "prefill":
+        step = build_prefill_step(model)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        with mesh:
+            lowered = jitted.lower(params_shapes, specs)
+    else:  # decode
+        B = shape.global_batch
+        if cfg.encdec:
+            cache_shapes = jax.eval_shape(
+                partial(model.init_cache, max_len=shape.seq_len),
+                params_shapes, specs["audio_feats"])
+        else:
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(B, shape.seq_len))
+        c_sh = meshlib.cache_shardings(cache_shapes, mesh)
+        tok_sh = {"tokens": b_sh["tokens"]}
+        step = build_serve_step(model)
+        logits_spec = jax.eval_shape(step, params_shapes,
+                                     specs["tokens"], cache_shapes)[0]
+        out_logits_sh = NamedSharding(
+            mesh, meshlib.batch_pspecs({"x": logits_spec}, mesh)["x"])
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, tok_sh["tokens"], c_sh),
+                         out_shardings=(out_logits_sh, c_sh))
+        with mesh:
+            lowered = jitted.lower(params_shapes, specs["tokens"],
+                                   cache_shapes)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes_of_hlo(hlo)
+
+    n_dev = 1
+    for s in mesh.devices.shape:
+        n_dev *= s
+    result = {
+        "status": "ok",
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "per_device_bytes": {
+            "arguments": int(mem.argument_size_in_bytes),
+            "output": int(mem.output_size_in_bytes),
+            "temp": int(mem.temp_size_in_bytes),
+            "alias": int(mem.alias_size_in_bytes),
+        },
+        "cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "collective_bytes_hlo_once": coll,
+    }
+    if extra_info:
+        result["hlo_collective_count"] = len(_COLLECTIVE_RE.findall(hlo))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--results", default=RESULTS)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.results)), exist_ok=True)
+    db = {}
+    if os.path.exists(args.results):
+        with open(args.results) as f:
+            db = json.load(f)
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" \
+        else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for multi in meshes:
+        mesh = meshlib.make_production_mesh(multi_pod=multi)
+        mtag = "multi" if multi else "single"
+        for a in archs:
+            for s in shapes:
+                key = f"{a}|{s}|{mtag}"
+                if key in db and db[key].get("status") in ("ok", "skipped") \
+                        and not args.force:
+                    print(f"[cached] {key}: {db[key]['status']}")
+                    continue
+                print(f"[run] {key} ...", flush=True)
+                try:
+                    db[key] = lower_combo(a, s, mesh)
+                except Exception as e:
+                    db[key] = {"status": "error",
+                               "error": f"{type(e).__name__}: {e}",
+                               "trace": traceback.format_exc()[-2000:]}
+                print(f"  -> {db[key]['status']} "
+                      f"({db[key].get('compile_s', '?')}s compile)",
+                      flush=True)
+                with open(args.results, "w") as f:
+                    json.dump(db, f, indent=1)
+
+    n_ok = sum(1 for v in db.values() if v["status"] == "ok")
+    n_skip = sum(1 for v in db.values() if v["status"] == "skipped")
+    n_err = sum(1 for v in db.values() if v["status"] == "error")
+    print(f"\nDRY-RUN SUMMARY: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        for k, v in db.items():
+            if v["status"] == "error":
+                print(f"  ERROR {k}: {v['error']}")
+
+
+if __name__ == "__main__":
+    main()

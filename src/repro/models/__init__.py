@@ -1,0 +1,1 @@
+from repro.models.registry import build_model, input_specs, supports_shape  # noqa: F401

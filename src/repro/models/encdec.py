@@ -1,0 +1,203 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+The mel-spectrogram + conv feature extractor is a STUB by assignment:
+`input_specs` feeds precomputed frame embeddings (B, n_frames, d_model).
+Positions are sinusoidal on both sides (the real decoder uses a learned
+448-entry table; sinusoidal keeps the mechanical decode_32k shape runnable
+— recorded in DESIGN.md §6).
+
+Split-learning mapping (vertical / multi-modal): the audio client owns the
+encoder, the text client owns the decoder embedding, and the server owns
+the cross-attending decoder stack — see examples/multimodal_vertical.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import attention as A
+from repro.nn import layers as L
+from repro.nn import module as nn
+from repro.nn import transformer as T
+
+
+def sinusoidal_positions(n: int, d: int, offset=0) -> jnp.ndarray:
+    pos = jnp.arange(n)[:, None] + offset
+    dim = jnp.arange(d // 2)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _dec_block_init(key, cfg: ArchConfig, ac: A.AttnConfig):
+    ks = nn.split_keys(key, 6)
+    return {
+        "norm1": L.layernorm_init(ks[0], cfg.d_model, dtype=cfg.dtype),
+        "self_attn": A.gqa_init(ks[1], ac),
+        "norm2": L.layernorm_init(ks[2], cfg.d_model, dtype=cfg.dtype),
+        "cross_attn": A.gqa_init(ks[3], ac),
+        "norm3": L.layernorm_init(ks[4], cfg.d_model, dtype=cfg.dtype),
+        "mlp": L.gelu_mlp_init(ks[5], cfg.d_model, cfg.d_ff, dtype=cfg.dtype),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDec:
+    cfg: ArchConfig
+
+    def _enc_spec(self) -> T.BlockSpec:
+        ac = A.AttnConfig(d_model=self.cfg.d_model, n_heads=self.cfg.n_heads,
+                          n_kv_heads=self.cfg.n_kv_heads,
+                          head_dim=self.cfg.resolved_head_dim,
+                          qkv_bias=True, kind="bidir", dtype=self.cfg.dtype)
+        return T.BlockSpec(d_model=self.cfg.d_model, mixer="attn",
+                           mlp="gelu", d_ff=self.cfg.d_ff, attn=ac,
+                           norm="layernorm", mlp_bias=True,
+                           dtype=self.cfg.dtype)
+
+    def _dec_attn_cfg(self) -> A.AttnConfig:
+        return A.AttnConfig(d_model=self.cfg.d_model, n_heads=self.cfg.n_heads,
+                            n_kv_heads=self.cfg.n_kv_heads,
+                            head_dim=self.cfg.resolved_head_dim,
+                            qkv_bias=True, rope_fraction=0.0,  # abs-pos model
+                            dtype=self.cfg.dtype)
+
+    def init(self, key):
+        ks = nn.key_iter(key)
+        cfg = self.cfg
+        ac = self._dec_attn_cfg()
+        dec_keys = jnp.stack(nn.split_keys(next(ks), cfg.n_layers))
+        return {
+            "enc_blocks": T.stack_init(next(ks), self._enc_spec(),
+                                       cfg.n_enc_layers),
+            "enc_norm": L.layernorm_init(next(ks), cfg.d_model,
+                                         dtype=cfg.dtype),
+            "embed": L.embedding_init(next(ks), cfg.vocab, cfg.d_model,
+                                      dtype=cfg.dtype),
+            "dec_blocks": jax.vmap(
+                lambda k: _dec_block_init(k, cfg, ac))(dec_keys),
+            "dec_norm": L.layernorm_init(next(ks), cfg.d_model,
+                                         dtype=cfg.dtype),
+        }
+
+    # ---- encoder ----
+    def encode(self, params, audio_feats):
+        """audio_feats: (B, n_frames, d_model) — post-conv-frontend stub."""
+        B, Tn, D = audio_feats.shape
+        x = audio_feats.astype(self.cfg.dtype) \
+            + sinusoidal_positions(Tn, D).astype(self.cfg.dtype)
+        x = T.stack_apply(params["enc_blocks"], self._enc_spec(), x)
+        return L.layernorm_apply(params["enc_norm"], x)
+
+    # ---- decoder ----
+    def _dec_block_apply(self, p, ac, x, enc_out, *, positions):
+        h = x + A.gqa_apply(p["self_attn"], ac,
+                            L.layernorm_apply(p["norm1"], x),
+                            positions=positions)
+        enc_kv = A.cross_attn_kv(p["cross_attn"], ac, enc_out)
+        h = h + A.cross_attn_apply(p["cross_attn"], ac,
+                                   L.layernorm_apply(p["norm2"], h), enc_kv)
+        h = h + L.gelu_mlp_apply(p["mlp"],
+                                 L.layernorm_apply(p["norm3"], h))
+        return h
+
+    def decode_full(self, params, tokens, enc_out):
+        """Teacher-forced decoder forward (train / prefill)."""
+        B, Sn = tokens.shape
+        ac = self._dec_attn_cfg()
+        x = L.embedding_apply(params["embed"], tokens)
+        x = x + sinusoidal_positions(Sn, self.cfg.d_model).astype(x.dtype)
+        positions = jnp.arange(Sn)
+
+        def body(h, p):
+            return self._dec_block_apply(p, ac, h, enc_out,
+                                         positions=positions), None
+
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        x = L.layernorm_apply(params["dec_norm"], x)
+        return L.embedding_attend(params["embed"], x)   # whisper ties output
+
+    def forward(self, params, batch, **_):
+        enc_out = self.encode(params, batch["audio_feats"])
+        return self.decode_full(params, batch["tokens"], enc_out)
+
+    def loss(self, params, batch, **_):
+        logits = self.forward(params, batch)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, batch["labels"][..., None], -1)[..., 0]
+        return nll.mean()
+
+    # ---- incremental decode ----
+    def init_cache(self, params, audio_feats, max_len: int):
+        """Runs the encoder once; caches cross-KV per layer + empty
+        self-attn KV rings."""
+        enc_out = self.encode(params, audio_feats)
+        ac = self._dec_attn_cfg()
+        B = audio_feats.shape[0]
+
+        def per_layer(p):
+            return A.cross_attn_kv(p["cross_attn"], ac, enc_out)
+
+        cross = jax.vmap(per_layer, in_axes=(0,))(params["dec_blocks"])
+        self_kv = {
+            "k": jnp.zeros((self.cfg.n_layers, B, max_len,
+                            self.cfg.n_kv_heads,
+                            self.cfg.resolved_head_dim), self.cfg.dtype),
+            "v": jnp.zeros((self.cfg.n_layers, B, max_len,
+                            self.cfg.n_kv_heads,
+                            self.cfg.resolved_head_dim), self.cfg.dtype),
+        }
+        return {"cross": cross, "self": self_kv,
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(self, params, tokens, cache):
+        """tokens: (B,1)."""
+        cfg = self.cfg
+        ac = self._dec_attn_cfg()
+        pos = cache["pos"]
+        x = L.embedding_apply(params["embed"], tokens)
+        x = x + sinusoidal_positions(1, cfg.d_model, offset=pos).astype(x.dtype)
+
+        def body(carry, inp):
+            h = carry
+            p, cross_kv, k_cache, v_cache = inp
+            hn = L.layernorm_apply(p["norm1"], h)
+            q = L.dense_apply(p["self_attn"]["wq"], hn).reshape(
+                hn.shape[0], 1, cfg.n_heads, cfg.resolved_head_dim)
+            k = L.dense_apply(p["self_attn"]["wk"], hn).reshape(
+                hn.shape[0], 1, cfg.n_kv_heads, cfg.resolved_head_dim)
+            v = L.dense_apply(p["self_attn"]["wv"], hn).reshape(
+                hn.shape[0], 1, cfg.n_kv_heads, cfg.resolved_head_dim)
+            k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos, 0, 0))
+            Tn = k_cache.shape[1]
+            valid = jnp.arange(Tn) < pos + 1
+            mask = jnp.broadcast_to(valid[None, None, :],
+                                    (hn.shape[0], 1, Tn))
+            att = A.grouped_attention(q, k_cache, v_cache, mask,
+                                      scale=1.0 / math.sqrt(
+                                          cfg.resolved_head_dim))
+            h = h + L.dense_apply(p["self_attn"]["wo"],
+                                  att.reshape(hn.shape[0], 1, -1))
+            h = h + A.cross_attn_apply(
+                p["cross_attn"], ac, L.layernorm_apply(p["norm2"], h),
+                cross_kv)
+            h = h + L.gelu_mlp_apply(p["mlp"],
+                                     L.layernorm_apply(p["norm3"], h))
+            return h, (k_cache, v_cache)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["cross"],
+                      cache["self"]["k"], cache["self"]["v"]))
+        x = L.layernorm_apply(params["dec_norm"], x)
+        logits = L.embedding_attend(params["embed"], x)
+        new_cache = {"cross": cache["cross"],
+                     "self": {"k": new_k, "v": new_v}, "pos": pos + 1}
+        return logits, new_cache
+
+
+def build_encdec(cfg: ArchConfig) -> EncDec:
+    return EncDec(cfg=cfg)

@@ -1,0 +1,67 @@
+"""Model registry: ArchConfig -> model object + input_specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models.encdec import build_encdec
+from repro.models.lm import build_lm
+
+
+def build_model(cfg: ArchConfig, *, long_context: bool = False):
+    if cfg.encdec:
+        return build_encdec(cfg)
+    return build_lm(cfg, long_context=long_context)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(*s):
+        return jax.ShapeDtypeStruct(s, i32)
+
+    if cfg.encdec:
+        feats = jax.ShapeDtypeStruct((B, cfg.n_audio_frames, cfg.d_model),
+                                     cfg.dtype)
+        if shape.kind == "train":
+            # audio "seq_len" is fixed by the frontend; text labels span S
+            # capped to the decoder's working length
+            s_txt = min(S, 448 if cfg.n_audio_frames > 100 else S)
+            return {"audio_feats": feats, "tokens": tok(B, s_txt),
+                    "labels": tok(B, s_txt)}
+        if shape.kind == "prefill":
+            s_txt = min(S, 448 if cfg.n_audio_frames > 100 else S)
+            return {"audio_feats": feats, "tokens": tok(B, s_txt)}
+        return {"audio_feats": feats, "tokens": tok(B, 1)}
+
+    if cfg.family == "vlm":
+        pe = jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.vision_dim),
+                                  cfg.dtype)
+        s_txt = max(S - cfg.n_patches, 1)
+        if shape.kind == "train":
+            return {"patch_embeds": pe, "tokens": tok(B, s_txt),
+                    "labels": tok(B, s_txt)}
+        if shape.kind == "prefill":
+            return {"patch_embeds": pe, "tokens": tok(B, s_txt)}
+        return {"patch_embeds": pe, "tokens": tok(B, 1)}
+
+    if shape.kind == "train":
+        return {"tokens": tok(B, S), "labels": tok(B, S)}
+    if shape.kind == "prefill":
+        return {"tokens": tok(B, S)}
+    return {"tokens": tok(B, 1)}
+
+
+def supports_shape(cfg: ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    """(supported, reason-if-not).  Encodes the DESIGN.md §6 skip rules."""
+    if shape.name == "long_500k":
+        if cfg.family in ("ssm", "hybrid"):
+            return True, ""
+        if cfg.long_window:
+            return True, ""
+        return False, ("full-attention arch without a sliding-window "
+                       "long-context variant")
+    return True, ""

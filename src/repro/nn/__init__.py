@@ -1,0 +1,2 @@
+from repro.nn import (attention, convnets, layers, module, moe, rglru, ssm,
+                      transformer)  # noqa: F401

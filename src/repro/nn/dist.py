@@ -1,0 +1,26 @@
+"""Shared mesh registry for shard_map-based layers.
+
+jax's ambient-mesh context does not flow into shard_map(mesh=None) on
+this version, so launchers register the mesh explicitly before tracing:
+
+    from repro.nn import dist
+    dist.set_mesh(mesh)
+"""
+from __future__ import annotations
+
+_MESH = None
+
+
+def set_mesh(mesh):
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    assert _MESH is not None, \
+        "call repro.nn.dist.set_mesh(mesh) before tracing shard_map paths"
+    return _MESH
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

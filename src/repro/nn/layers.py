@@ -1,0 +1,167 @@
+"""Primitive layers: dense, embedding, norms, conv (for CNN repro + whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as nn
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, *, bias: bool = False,
+               dtype=jnp.float32, stddev: float | None = None):
+    kw, _ = jax.random.split(key)
+    std = stddev if stddev is not None else (1.0 / jnp.sqrt(in_dim)).item() \
+        if False else None
+    if stddev is None:
+        w = nn.lecun_init(kw, (in_dim, out_dim), dtype, fan_in=in_dim)
+    else:
+        w = nn.normal_init(kw, (in_dim, out_dim), dtype, stddev)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, dim: int, *, dtype=jnp.float32):
+    return {"table": nn.normal_init(key, (vocab, dim), dtype, 0.02)}
+
+
+def embedding_apply(params, token_ids):
+    return params["table"][token_ids]
+
+
+def embedding_attend(params, x):
+    """Tied-softmax logits: x @ table.T"""
+    return x @ params["table"].T
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(_key, dim: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(params, x, *, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(_key, dim: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(params, x, *, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Conv2D / Conv1D (VGG / ResNet repro, whisper frontend stub)
+# ---------------------------------------------------------------------------
+
+def conv2d_init(key, in_ch: int, out_ch: int, ksize: int, *,
+                bias: bool = True, dtype=jnp.float32):
+    fan_in = in_ch * ksize * ksize
+    w = nn.lecun_init(key, (ksize, ksize, in_ch, out_ch), dtype, fan_in=fan_in)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((out_ch,), dtype)
+    return p
+
+
+def conv2d_apply(params, x, *, stride: int = 1, padding: str = "SAME"):
+    """x: (B, H, W, C)"""
+    y = jax.lax.conv_general_dilated(
+        x, params["w"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def conv1d_init(key, in_ch: int, out_ch: int, ksize: int, *,
+                bias: bool = True, dtype=jnp.float32):
+    fan_in = in_ch * ksize
+    w = nn.lecun_init(key, (ksize, in_ch, out_ch), dtype, fan_in=fan_in)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((out_ch,), dtype)
+    return p
+
+
+def conv1d_apply(params, x, *, stride: int = 1, padding: str = "SAME"):
+    """x: (B, T, C)"""
+    y = jax.lax.conv_general_dilated(
+        x, params["w"], window_strides=(stride,), padding=padding,
+        dimension_numbers=("NTC", "TIO", "NTC"))
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def maxpool2d(x, window: int = 2, stride: int = 2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, dim: int, hidden: int, *, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, dim, hidden, dtype=dtype),
+        "up": dense_init(k2, dim, hidden, dtype=dtype),
+        "down": dense_init(k3, hidden, dim, dtype=dtype),
+    }
+
+
+def swiglu_apply(params, x):
+    g = jax.nn.silu(dense_apply(params["gate"], x))
+    u = dense_apply(params["up"], x)
+    return dense_apply(params["down"], g * u)
+
+
+def gelu_mlp_init(key, dim: int, hidden: int, *, bias: bool = True,
+                  dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc1": dense_init(k1, dim, hidden, bias=bias, dtype=dtype),
+        "fc2": dense_init(k2, hidden, dim, bias=bias, dtype=dtype),
+    }
+
+
+def gelu_mlp_apply(params, x):
+    return dense_apply(params["fc2"],
+                       jax.nn.gelu(dense_apply(params["fc1"], x)))

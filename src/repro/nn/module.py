@@ -1,0 +1,100 @@
+"""Minimal functional module system.
+
+Parameters are plain nested dicts of jnp arrays ("param trees").  Every layer
+is a pair of pure functions:
+
+    init(key, ...) -> params
+    apply(params, x, ...) -> y
+
+Composite modules assemble sub-param-trees under string keys.  There is no
+class state; everything threads through explicitly, which keeps pjit
+in_shardings/param-partitioning rules straightforward (rules match on the
+param-tree path, see `repro.launch.mesh.partition_spec_for_path`).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict[str, Params | jnp.ndarray]
+
+
+def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))
+
+
+def key_iter(key: jax.Array) -> Iterator[jax.Array]:
+    """Infinite stream of fresh subkeys."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, dtype, stddev: float = 0.02):
+    return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+
+def lecun_init(key, shape, dtype, fan_in: int | None = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities
+# ---------------------------------------------------------------------------
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_paths(params: Params) -> list[tuple[str, ...]]:
+    """Flattened list of string paths, e.g. ('blocks', 'attn', 'wq')."""
+    out = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(params)[0]:
+        out.append(tuple(_path_elem_str(p) for p in path))
+    return out
+
+
+def _path_elem_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def map_with_path(fn: Callable[[tuple[str, ...], jax.Array], Any],
+                  params: Params) -> Params:
+    """tree_map where fn also receives the stringified path tuple."""
+    def wrap(path, leaf):
+        return fn(tuple(_path_elem_str(p) for p in path), leaf)
+    return jax.tree_util.tree_map_with_path(wrap, params)
+
+
+def cast_params(params: Params, dtype) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)

@@ -1,0 +1,109 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).  [arXiv:2402.19427]
+
+The recurrent block: x -> [linear -> conv1d -> RG-LRU] gated by a parallel
+GeLU branch, then output projection.  The RG-LRU recurrence per channel:
+
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = a^(c * r_t)   with a = sigmoid(Lambda),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill runs the recurrence with an associative scan (log-depth on
+TPU); decode is the O(1) step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.nn import module as nn
+
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    lru_width: int
+    d_conv: int = 4
+    dtype: Any = jnp.float32
+
+
+def rglru_init(key, cfg: RGLRUConfig):
+    ks = nn.split_keys(key, 6)
+    D, W = cfg.d_model, cfg.lru_width
+    return {
+        "in_x": L.dense_init(ks[0], D, W, dtype=cfg.dtype),
+        "in_gate": L.dense_init(ks[1], D, W, dtype=cfg.dtype),
+        "conv": L.conv1d_init(ks[2], W, W, cfg.d_conv, dtype=cfg.dtype),
+        "gate_a": L.dense_init(ks[3], W, W, bias=True, dtype=cfg.dtype),
+        "gate_x": L.dense_init(ks[4], W, W, bias=True, dtype=cfg.dtype),
+        # Lambda init so that a = sigmoid(Lambda) in [0.9, 0.999]
+        "lam": jnp.log(jnp.linspace(0.9, 0.999, W) /
+                       (1 - jnp.linspace(0.9, 0.999, W))).astype(jnp.float32),
+        "out": L.dense_init(ks[5], W, D, dtype=cfg.dtype),
+    }
+
+
+def _causal_conv(params, x, d_conv):
+    pad = d_conv - 1
+    xp = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    return L.conv1d_apply(params, xp, padding="VALID")
+
+
+def _rglru_gates(params, x):
+    """x: (..., W) -> log_a (decay log), gated input."""
+    r = jax.nn.sigmoid(L.dense_apply(params["gate_a"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.dense_apply(params["gate_x"], x).astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(params["lam"])       # (W,) < 0
+    log_a = _C * r * log_a_base                          # (..., W)
+    a = jnp.exp(log_a)
+    scaled_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * x.astype(jnp.float32))
+    return a, scaled_in
+
+
+def rglru_scan(a, u):
+    """Associative scan of h_t = a_t h_{t-1} + u_t over axis 1.
+    a,u: (B,S,W) float32."""
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, u1 * a2 + u2
+    av, uv = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return uv
+
+
+def rglru_block_apply(params, cfg: RGLRUConfig, x):
+    """Full recurrent block forward.  x: (B,S,D)."""
+    gate = jax.nn.gelu(L.dense_apply(params["in_gate"], x))
+    h = L.dense_apply(params["in_x"], x)
+    h = _causal_conv(params["conv"], h, cfg.d_conv)
+    a, u = _rglru_gates(params, h)
+    y = rglru_scan(a, u).astype(x.dtype)
+    return L.dense_apply(params["out"], y * gate)
+
+
+def rglru_init_cache(cfg: RGLRUConfig, batch: int):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.lru_width), cfg.dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_block_decode(params, cfg: RGLRUConfig, x, cache):
+    """x: (B,1,D) one-step."""
+    gate = jax.nn.gelu(L.dense_apply(params["in_gate"], x))
+    h_in = L.dense_apply(params["in_x"], x)              # (B,1,W)
+    window = jnp.concatenate([cache["conv"], h_in], axis=1)
+    conv_out = L.conv1d_apply(params["conv"], window, padding="VALID")[:, -1:, :]
+    new_conv = window[:, 1:, :]
+    a, u = _rglru_gates(params, conv_out)                # (B,1,W)
+    h_new = a[:, 0] * cache["h"] + u[:, 0]               # (B,W)
+    y = h_new[:, None, :].astype(x.dtype)
+    out = L.dense_apply(params["out"], y * gate)
+    return out, {"conv": new_conv, "h": h_new}

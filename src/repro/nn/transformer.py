@@ -1,0 +1,188 @@
+"""Transformer blocks + scan-over-layers stacks.
+
+A `BlockSpec` describes one residual block: a temporal mixer
+("attn" | "mla" | "mamba2" | "rglru") plus a channel mixer
+("swiglu" | "gelu" | "moe" | "none").  Stacks of homogeneous blocks are
+scanned (stacked params, jax.lax.scan) to keep HLO size O(1) in depth —
+essential for the 88-layer dry-runs.  Heterogeneous stacks (hybrid
+patterns, first-layer-dense MoE) are expressed as a sequence of
+homogeneous groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as A
+from repro.nn import layers as L
+from repro.nn import module as nn
+from repro.nn import moe as M
+from repro.nn import rglru as R
+from repro.nn import ssm as S
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    d_model: int
+    mixer: str                            # attn | mla | mamba2 | rglru
+    mlp: str                              # swiglu | gelu | moe | none
+    d_ff: int = 0
+    attn: A.AttnConfig | None = None
+    moe: M.MoEConfig | None = None
+    ssm: S.SSMConfig | None = None
+    rglru: R.RGLRUConfig | None = None
+    norm: str = "rmsnorm"                 # rmsnorm | layernorm
+    mlp_bias: bool = False
+    dtype: Any = jnp.float32
+
+
+def _norm_init(key, spec: BlockSpec):
+    if spec.norm == "rmsnorm":
+        return L.rmsnorm_init(key, spec.d_model, dtype=spec.dtype)
+    return L.layernorm_init(key, spec.d_model, dtype=spec.dtype)
+
+
+def _norm_apply(params, spec: BlockSpec, x):
+    if spec.norm == "rmsnorm":
+        return L.rmsnorm_apply(params, x)
+    return L.layernorm_apply(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+def block_init(key, spec: BlockSpec):
+    ks = nn.split_keys(key, 4)
+    p = {"norm1": _norm_init(ks[0], spec)}
+    if spec.mixer == "attn":
+        p["mixer"] = A.gqa_init(ks[1], spec.attn)
+    elif spec.mixer == "mla":
+        p["mixer"] = A.mla_init(ks[1], spec.attn)
+    elif spec.mixer == "mamba2":
+        p["mixer"] = S.mamba2_init(ks[1], spec.ssm)
+    elif spec.mixer == "rglru":
+        p["mixer"] = R.rglru_init(ks[1], spec.rglru)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.mlp != "none":
+        p["norm2"] = _norm_init(ks[2], spec)
+        if spec.mlp == "swiglu":
+            p["mlp"] = L.swiglu_init(ks[3], spec.d_model, spec.d_ff,
+                                     dtype=spec.dtype)
+        elif spec.mlp == "gelu":
+            p["mlp"] = L.gelu_mlp_init(ks[3], spec.d_model, spec.d_ff,
+                                       bias=spec.mlp_bias, dtype=spec.dtype)
+        elif spec.mlp == "moe":
+            p["mlp"] = M.moe_init(ks[3], spec.moe)
+        else:
+            raise ValueError(spec.mlp)
+    return p
+
+
+def _mixer_apply(params, spec: BlockSpec, x, *, positions=None, mask=None):
+    if spec.mixer == "attn":
+        return A.gqa_apply(params, spec.attn, x, positions=positions, mask=mask)
+    if spec.mixer == "mla":
+        return A.mla_apply(params, spec.attn, x, positions=positions, mask=mask)
+    if spec.mixer == "mamba2":
+        return S.mamba2_apply(params, spec.ssm, x)
+    if spec.mixer == "rglru":
+        return R.rglru_block_apply(params, spec.rglru, x)
+    raise ValueError(spec.mixer)
+
+
+def _mlp_apply(params, spec: BlockSpec, x):
+    if spec.mlp == "swiglu":
+        return L.swiglu_apply(params, x)
+    if spec.mlp == "gelu":
+        return L.gelu_mlp_apply(params, x)
+    if spec.mlp == "moe":
+        return M.moe_apply(params, spec.moe, x)
+    raise ValueError(spec.mlp)
+
+
+def block_apply(params, spec: BlockSpec, x, *, positions=None, mask=None):
+    h = x + _mixer_apply(params["mixer"], spec,
+                         _norm_apply(params["norm1"], spec, x),
+                         positions=positions, mask=mask)
+    if spec.mlp != "none":
+        h = h + _mlp_apply(params["mlp"], spec,
+                           _norm_apply(params["norm2"], spec, h))
+    return h
+
+
+# --- decode ---------------------------------------------------------------
+
+def block_init_cache(spec: BlockSpec, batch: int, max_len: int):
+    if spec.mixer in ("attn",):
+        return A.gqa_init_cache(spec.attn, batch, max_len)
+    if spec.mixer == "mla":
+        return A.mla_init_cache(spec.attn, batch, max_len)
+    if spec.mixer == "mamba2":
+        return S.mamba2_init_cache(spec.ssm, batch)
+    if spec.mixer == "rglru":
+        return R.rglru_init_cache(spec.rglru, batch)
+    raise ValueError(spec.mixer)
+
+
+def block_decode(params, spec: BlockSpec, x, cache):
+    xn = _norm_apply(params["norm1"], spec, x)
+    if spec.mixer == "attn":
+        y, cache = A.gqa_decode(params["mixer"], spec.attn, xn, cache)
+    elif spec.mixer == "mla":
+        y, cache = A.mla_decode(params["mixer"], spec.attn, xn, cache)
+    elif spec.mixer == "mamba2":
+        y, cache = S.mamba2_decode(params["mixer"], spec.ssm, xn, cache)
+    elif spec.mixer == "rglru":
+        y, cache = R.rglru_block_decode(params["mixer"], spec.rglru, xn, cache)
+    else:
+        raise ValueError(spec.mixer)
+    h = x + y
+    if spec.mlp != "none":
+        h = h + _mlp_apply(params["mlp"], spec,
+                           _norm_apply(params["norm2"], spec, h))
+    return h, cache
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous stacks (scan over stacked params)
+# ---------------------------------------------------------------------------
+
+def stack_init(key, spec: BlockSpec, n_layers: int):
+    keys = jnp.stack(nn.split_keys(key, n_layers))
+    return jax.vmap(lambda k: block_init(k, spec))(keys)
+
+
+def stack_apply(params, spec: BlockSpec, x, *, positions=None, mask=None,
+                remat: bool = False):
+    def fn(layer_params, h):
+        return block_apply(layer_params, spec, h, positions=positions,
+                           mask=mask)
+    if remat:
+        fn = jax.checkpoint(fn)
+
+    def body(h, layer_params):
+        return fn(layer_params, h), None
+
+    out, _ = jax.lax.scan(body, x, params)
+    return out
+
+
+def stack_init_cache(spec: BlockSpec, n_layers: int, batch: int, max_len: int):
+    one = block_init_cache(spec, batch, max_len)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.repeat(a[None], n_layers, axis=0), one)
+
+
+def stack_decode(params, spec: BlockSpec, x, caches):
+    def body(h, pc):
+        layer_params, cache = pc
+        h, new_cache = block_decode(layer_params, spec, h, cache)
+        return h, new_cache
+
+    out, new_caches = jax.lax.scan(body, x, (params, caches))
+    return out, new_caches

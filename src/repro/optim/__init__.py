@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (adam, adamw, apply_updates,
+                                    clip_by_global_norm, global_norm,
+                                    sgd)  # noqa: F401
+from repro.optim import schedules  # noqa: F401

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see ONE device — the 512-device override
+# belongs to launch/dryrun.py exclusively (see the multi-pod dry-run spec).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

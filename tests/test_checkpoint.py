@@ -1,0 +1,44 @@
+"""Checkpoint roundtrip + manifest."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def test_roundtrip_lm(tmp_path):
+    cfg = get_config("chatglm3_6b").reduced()
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    path = str(tmp_path / "ck")
+    ckpt.save(path, params, step=7, extra={"arch": cfg.name})
+    restored = ckpt.restore(path, jax.eval_shape(m.init, key))
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    man = ckpt.load_manifest(path)
+    assert man["step"] == 7
+    assert man["extra"]["arch"] == cfg.name
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    params = {"w": jnp.ones((3, 3))}
+    path = str(tmp_path / "ck")
+    ckpt.save(path, params)
+    bad = {"w": jax.ShapeDtypeStruct((4, 3), jnp.float32)}
+    with pytest.raises(ValueError):
+        ckpt.restore(path, bad)
+
+
+def test_restore_casts_dtype(tmp_path):
+    params = {"w": jnp.ones((3, 3), jnp.float32)}
+    path = str(tmp_path / "ck")
+    ckpt.save(path, params)
+    tmpl = {"w": jax.ShapeDtypeStruct((3, 3), jnp.bfloat16)}
+    out = ckpt.restore(path, tmpl)
+    assert out["w"].dtype == jnp.bfloat16

@@ -1,0 +1,161 @@
+"""Per-kernel correctness: shape/dtype sweeps against the pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 128), (2, 7, 256), (1, 33, 512),
+                                   (3, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, shape, dtype)
+    sc = (jax.random.normal(k2, shape[-1:]) * 0.1 + 1.0).astype(dtype)
+    out = ops.rmsnorm(x, sc, interpret=True)
+    expect = ref.rmsnorm_ref(x, sc)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+def test_rmsnorm_row_padding():
+    """Rows not divisible by the block size must still be exact."""
+    x = jax.random.normal(KEY, (5, 77, 128))
+    sc = jnp.ones((128,))
+    out = ops.rmsnorm(x, sc, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.rmsnorm_ref(x, sc)), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# splitcat_linear
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims", [((128,), 256), ((128, 128), 256),
+                                  ((192, 64, 128), 384), ((256, 256), 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bias", [True, False])
+def test_splitcat_sweep(dims, dtype, bias):
+    part_dims, d_out = dims
+    ks = jax.random.split(KEY, len(part_dims) + 2)
+    parts = [jax.random.normal(ks[i], (3, 17, d), dtype) * 0.5
+             for i, d in enumerate(part_dims)]
+    w = (jax.random.normal(ks[-2], (sum(part_dims), d_out)) * 0.05
+         ).astype(dtype)
+    b = jax.random.normal(ks[-1], (d_out,)).astype(dtype) if bias else None
+    out = ops.splitcat_linear(parts, w, b, interpret=True)
+    expect = ref.splitcat_linear_ref(parts, w, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+def test_splitcat_never_concatenates():
+    """The jaxpr of the kernel path must not contain concatenate on the
+    activation rank (the whole point of the fusion)."""
+    a = jnp.zeros((4, 8, 128))
+    b = jnp.zeros((4, 8, 128))
+    w = jnp.zeros((256, 128))
+    jaxpr = jax.make_jaxpr(
+        lambda *args: ops.splitcat_linear([args[0], args[1]], args[2],
+                                          interpret=True))(a, b, w)
+    assert "concatenate" not in str(jaxpr), "concat materialized!"
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,k,d", [(128, 4, 4, 64), (256, 4, 2, 64),
+                                     (128, 8, 1, 128), (64, 2, 2, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_causal_sweep(s, h, k, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, s, h, d), dtype)
+    kk = jax.random.normal(ks[1], (2, s, k, d), dtype)
+    v = jax.random.normal(ks[2], (2, s, k, d), dtype)
+    out = ops.flash_attention(q, kk, v, causal=True, block_q=64,
+                              block_kv=64, interpret=True)
+    kr = jnp.repeat(kk, h // k, 2)
+    vr = jnp.repeat(v, h // k, 2)
+    expect = ref.flash_attention_ref(q, kr, vr, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=3e-2 if dtype == jnp.bfloat16 else 2e-5,
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 2e-5)
+
+
+@pytest.mark.parametrize("window", [32, 64, 100])
+def test_flash_sliding_window(window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_kv=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_noncausal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    out = ops.flash_attention(q, k, v, causal=False, block_q=64,
+                              block_kv=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,g,p,n,chunk", [
+    (64, 2, 1, 32, 16, 16), (128, 4, 2, 16, 32, 32), (96, 3, 3, 64, 8, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_sweep(s, h, g, p, n, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = (jax.random.normal(ks[0], (2, s, h, p)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, s, h))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.2)
+    Bm = (jax.random.normal(ks[3], (2, s, g, n)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (2, s, g, n)) * 0.3).astype(dtype)
+    out = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    expect = ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_ssd_matches_nn_module_path():
+    """The kernel and the nn.ssm chunked implementation must agree."""
+    from repro.nn.ssm import ssd_chunked
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (1, 64, 2, 16)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 64, 2)))
+    A = -jnp.exp(jax.random.normal(ks[2], (2,)) * 0.2)
+    Bm = jax.random.normal(ks[3], (1, 64, 1, 8)) * 0.3
+    Cm = jax.random.normal(ks[4], (1, 64, 1, 8)) * 0.3
+    out_k = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=16, interpret=True)
+    out_m = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_m),
+                               atol=1e-4, rtol=1e-4)

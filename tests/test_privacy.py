@@ -1,0 +1,92 @@
+"""Privacy invariants: what crosses the wire, and how much it leaks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import privacy as pv
+from repro.core import split as sp
+from repro.nn import convnets as C
+
+
+def ce(logits, labels):
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(lp, labels[:, None], 1).mean()
+
+
+def test_wires_carry_only_cut_tensors():
+    cfg = C.CNNConfig(name="t", width_mult=0.25, plan=(16, "M", 32, "M"),
+                      n_classes=4)
+    plan = C.vgg_plan(cfg)
+    model = sp.list_segmodel(
+        n_segments=len(plan),
+        init=lambda k: C.vgg_init(k, cfg),
+        layer_apply=lambda p, i, x: C.vgg_layer_apply(p, plan[i], x))
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    x = jax.random.normal(key, (8, 16, 16, 3))
+    y = jax.random.randint(key, (8,), 0, 4)
+    pc = model.param_slice(params, 0, 2)
+    ps = model.param_slice(params, 2, model.n_segments)
+    _, _, _, wires = sp.vanilla_split_grads(model, 2, pc, ps, x, y, ce)
+    problems = pv.assert_no_raw_payload(wires, {"x": x})
+    assert problems == [], problems
+    # exactly one act up + one grad down, both with the cut shape
+    assert len(wires) == 2
+    assert wires[0].shape == wires[1].shape != x.shape
+
+
+def test_distance_correlation_properties():
+    key = jax.random.PRNGKey(1)
+    k1, k2 = jax.random.split(key)
+    # empirical dcor of independent samples is upward-biased ~ O(1/sqrt(n));
+    # use enough samples to separate the regimes cleanly.
+    x = jax.random.normal(k1, (512, 5))
+    assert float(pv.distance_correlation(x, x)) > 0.99
+    z = jax.random.normal(k2, (512, 5))
+    d_indep = float(pv.distance_correlation(x, z))
+    d_func = float(pv.distance_correlation(
+        x, jnp.tanh(x @ jnp.ones((5, 3)))))
+    assert d_indep < 0.35, d_indep
+    assert d_func > 2 * d_indep, (d_func, d_indep)
+
+
+def test_leakage_decreases_with_depth():
+    """Deeper cuts leak less raw-input structure (motivates cut choice)."""
+    cfg = C.CNNConfig(name="t", width_mult=0.5,
+                      plan=(16, "M", 32, "M", 64, "M"), n_classes=4)
+    plan = C.vgg_plan(cfg)
+    key = jax.random.PRNGKey(2)
+    params = C.vgg_init(key, cfg)
+    from repro.data.synthetic import image_batch
+    b = image_batch(key, 48, 4, hw=16)
+    x = b["images"]
+    d_shallow = float(pv.distance_correlation(
+        x, C.vgg_apply(params, cfg, x, from_layer=0, to_layer=1)))
+    d_deep = float(pv.distance_correlation(
+        x, C.vgg_apply(params, cfg, x, from_layer=0, to_layer=6)))
+    assert d_deep < d_shallow + 0.05  # deep cut never leaks much more
+
+
+def test_u_shape_wire_has_no_label_shaped_payload():
+    cfg = C.CNNConfig(name="t", width_mult=0.25, plan=(16, "M", 32, "M"),
+                      n_classes=4)
+    plan = C.vgg_plan(cfg)
+    model = sp.list_segmodel(
+        n_segments=len(plan),
+        init=lambda k: C.vgg_init(k, cfg),
+        layer_apply=lambda p, i, x: C.vgg_layer_apply(p, plan[i], x))
+    key = jax.random.PRNGKey(3)
+    params = model.init(key)
+    x = jax.random.normal(key, (8, 16, 16, 3))
+    y = jax.random.randint(key, (8,), 0, 4)
+    head = model.param_slice(params, 0, 1)
+    mid = model.param_slice(params, 1, 4)
+    tail = model.param_slice(params, 4, model.n_segments)
+    _, _, _, _, wires = sp.u_shaped_grads(model, 1, 4, head, mid, tail,
+                                          x, y, ce)
+    problems = pv.assert_no_raw_payload(wires, {"x": x, "labels": y})
+    assert problems == []
+    # nothing on the wire has the label vector's shape
+    for w in wires:
+        assert tuple(w.shape) != tuple(y.shape)

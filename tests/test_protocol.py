@@ -1,0 +1,155 @@
+"""Protocol-level behaviour: the three methods the paper compares all
+train; SplitNN's client resource meters show the paper's asymmetry."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.core import baselines as bl
+from repro.core import protocol as pr
+from repro.core import split as sp
+from repro.core.accounting import (paper_table1_setup, paper_table2_setup)
+from repro.data import synthetic as syn
+from repro.nn import convnets as C
+
+
+def ce(logits, labels):
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(lp, labels[:, None], 1).mean()
+
+
+CFG = C.CNNConfig(name="t", width_mult=0.25, plan=(16, 16, "M", 32, "M"),
+                  n_classes=4)
+PLAN = C.vgg_plan(CFG)
+
+
+def make_model():
+    return sp.list_segmodel(
+        n_segments=len(PLAN),
+        init=lambda k: C.vgg_init(k, CFG),
+        layer_apply=lambda p, i, x: C.vgg_layer_apply(p, PLAN[i], x))
+
+
+def client_shards(key, n_clients, per=16):
+    b = syn.image_batch(key, per * n_clients, 4)
+    return [{"x": b["images"][i * per:(i + 1) * per],
+             "labels": b["labels"][i * per:(i + 1) * per]}
+            for i in range(n_clients)]
+
+
+def test_split_trainer_learns():
+    tr = pr.SplitTrainer(model=make_model(), cut=2, loss_fn=ce,
+                         optimizer_client=optim.sgd(0.05, 0.9),
+                         optimizer_server=optim.sgd(0.05, 0.9), n_clients=3)
+    key = jax.random.PRNGKey(0)
+    state = tr.init(key)
+    losses = []
+    for r in range(10):
+        key, k = jax.random.split(key)
+        state, loss = tr.train_round(state, client_shards(k, 3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"{losses[0]} -> {losses[-1]}"
+    ev = syn.image_batch(jax.random.PRNGKey(9), 64, 4)
+    acc = float(tr.evaluate(state, {"x": ev["images"],
+                                    "labels": ev["labels"]}))
+    assert acc > 0.25  # better than chance
+
+
+def test_u_shaped_trainer_learns_without_label_wire():
+    tr = pr.UShapedTrainer(model=make_model(), cut1=1, cut2=4, loss_fn=ce,
+                           optimizer=optim.adamw(3e-3), n_clients=2)
+    key = jax.random.PRNGKey(1)
+    state = tr.init(key)
+    losses = []
+    for r in range(20):
+        key, k = jax.random.split(key)
+        shards = client_shards(k, 2, per=32)
+        for ci, b in enumerate(shards):
+            state, loss = tr.client_turn(state, ci, b)
+        losses.append(float(loss))
+    import numpy as np
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]) - 0.05, losses
+    # wires: only activations and activation-grads, never labels
+    total_label_bytes = 0
+    assert tr.meter.bytes_up[0] > 0 and tr.meter.bytes_down[0] > 0
+
+
+def test_all_three_methods_comparable():
+    key = jax.random.PRNGKey(2)
+    # splitNN
+    tr = pr.SplitTrainer(model=make_model(), cut=2, loss_fn=ce,
+                         optimizer_client=optim.sgd(0.05, 0.9),
+                         optimizer_server=optim.sgd(0.05, 0.9), n_clients=2)
+    st_split = tr.init(key)
+    # fedavg / lbsgd share the monolithic apply
+    fa = bl.FedAvgTrainer(init_fn=lambda k: C.vgg_init(k, CFG),
+                          apply_fn=lambda p, x: C.vgg_apply(p, CFG, x),
+                          loss_fn=ce, optimizer=optim.sgd(0.05, 0.9),
+                          n_clients=2)
+    st_fa = fa.init(key)
+    lb = bl.LargeBatchSGDTrainer(init_fn=lambda k: C.vgg_init(k, CFG),
+                                 apply_fn=lambda p, x: C.vgg_apply(p, CFG, x),
+                                 loss_fn=ce, optimizer=optim.sgd(0.05, 0.9),
+                                 n_clients=2)
+    st_lb = lb.init(key)
+    for r in range(5):
+        key, k = jax.random.split(key)
+        shards = client_shards(k, 2)
+        st_split, _ = tr.train_round(st_split, shards)
+        st_fa, _ = fa.train_round(st_fa, shards)
+        st_lb, _ = lb.train_step(st_lb, shards)
+
+    # the paper's central resource claim: split client flops << full-model
+    split_flops = tr.meter.totals()["client_tflops"][0]
+    fa_flops = fa.meter.totals()["client_tflops"][0]
+    lb_flops = lb.meter.totals()["client_tflops"][0]
+    assert split_flops < fa_flops
+    assert split_flops < lb_flops
+    assert abs(fa_flops - lb_flops) / fa_flops < 1e-6  # same full model
+
+
+def test_sync_none_vs_p2p_bytes():
+    key = jax.random.PRNGKey(3)
+    for sync in ("p2p", "none"):
+        tr = pr.SplitTrainer(model=make_model(), cut=2, loss_fn=ce,
+                             optimizer_client=optim.sgd(0.05),
+                             optimizer_server=optim.sgd(0.05),
+                             n_clients=2, sync=sync)
+        st = tr.init(key)
+        st, _ = tr.train_round(st, client_shards(key, 2))
+        st, _ = tr.train_round(st, client_shards(key, 2))
+        if sync == "p2p":
+            assert sum(tr.meter.sync_bytes) > 0
+        else:
+            assert sum(tr.meter.sync_bytes) == 0
+
+
+# ---------------------------------------------------------------------------
+# Analytic accounting vs the paper's Tables 1 & 2
+# ---------------------------------------------------------------------------
+
+def test_table1_client_flops_ordering_and_magnitude():
+    for n in (100, 500):
+        c = paper_table1_setup(n)
+        f_split = c.splitnn()["tflops"]
+        f_fed = c.fedavg()["tflops"]
+        f_lb = c.lbsgd()["tflops"]
+        assert f_fed == f_lb
+        # the paper's ratio: 29.4 / 0.1548 ~= 190x for VGG cut at layer 2
+        ratio = f_fed / f_split
+        assert 30 < ratio < 600, ratio
+    # 5x more clients -> 5x less per-client compute (paper rows)
+    c100, c500 = paper_table1_setup(100), paper_table1_setup(500)
+    assert abs(c100.fedavg()["tflops"] / c500.fedavg()["tflops"] - 5) < 0.01
+
+
+def test_table2_bandwidth_crossover():
+    """Paper Table 2: with FEW clients federated learning uses less
+    bandwidth than splitNN; with MANY clients splitNN wins."""
+    few = paper_table2_setup(100)
+    many = paper_table2_setup(500)
+    assert few.splitnn()["gb"] > few.fedavg()["gb"]      # 6 GB vs 3 GB
+    assert many.splitnn()["gb"] < many.fedavg()["gb"]    # 1.2 GB vs 2.4 GB
+    # large-batch SGD is the bandwidth hog in both regimes
+    assert few.lbsgd()["gb"] > few.fedavg()["gb"]
+    assert many.lbsgd()["gb"] > many.fedavg()["gb"]

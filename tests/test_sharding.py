@@ -1,0 +1,126 @@
+"""Sharding-rule unit tests: every generated PartitionSpec must be valid
+for the production mesh (divisibility), params/caches of every arch get
+specs without error, and tensor-parallel rules hit the dims they should.
+
+Uses a fake mesh object (axis sizes only) — real-device mesh construction
+is exclusively dryrun.py's job."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch import mesh as meshlib
+from repro.models import build_model, input_specs, supports_shape
+
+
+@dataclasses.dataclass
+class FakeMesh:
+    shape: dict
+    axis_names: tuple
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16}, ("data", "model"))
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16},
+                 ("pod", "data", "model"))
+
+
+def axis_size(mesh, ax):
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def check_divisible(shapes_tree, specs_tree, mesh):
+    leaves_s = jax.tree_util.tree_leaves(shapes_tree)
+    leaves_p = jax.tree_util.tree_leaves(
+        specs_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert len(leaves_s) == len(leaves_p)
+    for sh, spec in zip(leaves_s, leaves_p):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            assert sh.shape[dim] % axis_size(mesh, ax) == 0, (sh.shape, spec)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+def test_param_specs_divisible_every_arch(arch_id, mesh):
+    cfg = get_config(arch_id)
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(m.init, key)
+    specs = meshlib.param_pspecs(shapes, mesh)
+    check_divisible(shapes, specs, mesh)
+
+
+@pytest.mark.parametrize("arch_id", ["qwen1_5_32b", "deepseek_v2_236b",
+                                     "whisper_base", "mamba2_130m"])
+def test_cache_specs_divisible(arch_id):
+    cfg = get_config(arch_id)
+    m = build_model(cfg, long_context=True)
+    shape = INPUT_SHAPES["decode_32k"]
+    key = jax.random.PRNGKey(0)
+    if cfg.encdec:
+        specs_in = input_specs(cfg, shape)
+        params_shapes = jax.eval_shape(m.init, key)
+        from functools import partial
+        cache_shapes = jax.eval_shape(
+            partial(m.init_cache, max_len=shape.seq_len),
+            params_shapes, specs_in["audio_feats"])
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda: m.init_cache(shape.global_batch, shape.seq_len))
+    specs = meshlib.cache_pspecs(cache_shapes, SINGLE)
+    check_divisible(cache_shapes, specs, SINGLE)
+
+
+def test_tensor_parallel_hits_ffn_and_heads():
+    cfg = get_config("mistral_large_123b")
+    m = build_model(cfg)
+    shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    specs = meshlib.param_pspecs(shapes, SINGLE)
+    blk = specs["groups"][0]["0"]
+    assert tuple(blk["mixer"]["wq"]["w"]) == (None, None, "model")
+    assert tuple(blk["mixer"]["wo"]["w"]) == (None, "model", None)
+    assert tuple(blk["mlp"]["gate"]["w"]) == (None, None, "model")
+    assert tuple(blk["mlp"]["down"]["w"]) == (None, "model", None)
+
+
+def test_expert_parallel_hits_expert_dim():
+    cfg = get_config("qwen3_moe_30b_a3b")
+    m = build_model(cfg)
+    shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    specs = meshlib.param_pspecs(shapes, SINGLE)
+    moe_spec = specs["groups"][0]["0"]["mlp"]
+    assert tuple(moe_spec["gate"]) == (None, "model", None, None)
+    assert tuple(moe_spec["down"]) == (None, "model", None, None)
+
+
+def test_batch_specs_fall_back_to_seq_for_batch1():
+    specs = {"tokens": jax.ShapeDtypeStruct((1, 524288), jnp.int32)}
+    out = meshlib.batch_pspecs(specs, SINGLE)
+    assert out["tokens"][0] is None
+    seq_axis = out["tokens"][1]
+    if not isinstance(seq_axis, tuple):
+        seq_axis = (seq_axis,)
+    assert "data" in seq_axis
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_input_specs_exist_for_all_supported_pairs(arch_id):
+    cfg = get_config(arch_id)
+    n = 0
+    for shape in INPUT_SHAPES.values():
+        ok, why = supports_shape(cfg, shape)
+        if not ok:
+            assert shape.name == "long_500k"
+            continue
+        sp = input_specs(cfg, shape)
+        assert "tokens" in sp
+        n += 1
+    assert n >= 3

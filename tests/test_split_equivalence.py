@@ -1,0 +1,206 @@
+"""The defining correctness property of SplitNN: splitting a network at a
+cut layer must be *mathematically invisible* — split gradients equal the
+monolithic gradients exactly (same autodiff graph, different ownership)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import split as sp
+from repro.nn import convnets as C
+
+
+def ce(logits, labels):
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(lp, labels[:, None], 1).mean()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = C.CNNConfig(name="t", width_mult=0.25,
+                      plan=(16, "M", 32, "M"), n_classes=5)
+    plan = C.vgg_plan(cfg)
+    model = sp.list_segmodel(
+        n_segments=len(plan),
+        init=lambda k: C.vgg_init(k, cfg),
+        layer_apply=lambda p, i, x: C.vgg_layer_apply(p, plan[i], x))
+    key = jax.random.PRNGKey(7)
+    params = model.init(key)
+    x = jax.random.normal(key, (8, 16, 16, 3))
+    y = jax.random.randint(key, (8,), 0, 5)
+    return model, params, x, y
+
+
+def mono_grads(model, params, x, y):
+    def loss(p):
+        return ce(model.apply_range(p, x, 0, model.n_segments), y)
+    return jax.value_and_grad(loss)(params)
+
+
+@pytest.mark.parametrize("cut", [1, 2, 3])
+def test_vanilla_split_equals_monolithic(setup, cut):
+    model, params, x, y = setup
+    l_mono, g_mono = mono_grads(model, params, x, y)
+    pc = model.param_slice(params, 0, cut)
+    ps = model.param_slice(params, cut, model.n_segments)
+    l_split, g_c, g_s, wires = sp.vanilla_split_grads(
+        model, cut, pc, ps, x, y, ce)
+    np.testing.assert_allclose(float(l_mono), float(l_split), rtol=1e-6)
+    joined = model.param_join([g_c, g_s])
+    for gm, gj in zip(jax.tree_util.tree_leaves(g_mono),
+                      jax.tree_util.tree_leaves(joined)):
+        np.testing.assert_allclose(np.asarray(gm), np.asarray(gj),
+                                   atol=1e-6, rtol=1e-5)
+    # the wire carried exactly one activation up and one gradient down
+    assert [w.direction for w in wires] == ["up", "down"]
+
+
+def test_u_shaped_split_equals_monolithic(setup):
+    model, params, x, y = setup
+    cut1, cut2 = 1, 4
+    l_mono, g_mono = mono_grads(model, params, x, y)
+    head = model.param_slice(params, 0, cut1)
+    mid = model.param_slice(params, cut1, cut2)
+    tail = model.param_slice(params, cut2, model.n_segments)
+    l_split, g_h, g_m, g_t, wires = sp.u_shaped_grads(
+        model, cut1, cut2, head, mid, tail, x, y, ce)
+    np.testing.assert_allclose(float(l_mono), float(l_split), rtol=1e-6)
+    joined = model.param_join([g_h, g_m, g_t])
+    for gm, gj in zip(jax.tree_util.tree_leaves(g_mono),
+                      jax.tree_util.tree_leaves(joined)):
+        np.testing.assert_allclose(np.asarray(gm), np.asarray(gj),
+                                   atol=1e-6, rtol=1e-5)
+    # u-shape: act1 up, act2 down, g2 up, g1 down — labels never move
+    assert [w.direction for w in wires] == ["up", "down", "up", "down"]
+
+
+def test_multihop_split_equals_monolithic(setup):
+    model, params, x, y = setup
+    cuts = [1, 2, 4]
+    l_mono, g_mono = mono_grads(model, params, x, y)
+    bounds = [0] + cuts + [model.n_segments]
+    slabs = [model.param_slice(params, bounds[i], bounds[i + 1])
+             for i in range(len(bounds) - 1)]
+    l_split, g_slabs, wires = sp.multihop_grads(model, cuts, slabs, x, y, ce)
+    np.testing.assert_allclose(float(l_mono), float(l_split), rtol=1e-6)
+    joined = model.param_join(g_slabs)
+    for gm, gj in zip(jax.tree_util.tree_leaves(g_mono),
+                      jax.tree_util.tree_leaves(joined)):
+        np.testing.assert_allclose(np.asarray(gm), np.asarray(gj),
+                                   atol=1e-6, rtol=1e-5)
+
+
+def test_vertical_split_equals_joint():
+    """Two modality branches + trunk == the same network trained jointly."""
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3, kx = jax.random.split(key, 4)
+    import repro.nn.layers as L
+
+    br_a = sp.Branch(
+        init=lambda k: L.dense_init(k, 12, 16, bias=True),
+        apply=lambda p, x: jax.nn.relu(L.dense_apply(p, x)))
+    br_b = sp.Branch(
+        init=lambda k: L.dense_init(k, 8, 8, bias=True),
+        apply=lambda p, x: jax.nn.relu(L.dense_apply(p, x)))
+    trunk_p = L.dense_init(k3, 24, 5, bias=True)
+    trunk = lambda p, f: L.dense_apply(p, f)
+
+    pa, pb = br_a.init(k1), br_b.init(k2)
+    xa = jax.random.normal(kx, (16, 12))
+    xb = jax.random.normal(kx, (16, 8))
+    y = jax.random.randint(kx, (16,), 0, 5)
+
+    def joint_loss(pa_, pb_, pt_):
+        f = jnp.concatenate([br_a.apply(pa_, xa), br_b.apply(pb_, xb)], -1)
+        return ce(trunk(pt_, f), y)
+
+    l_mono, g_mono = jax.value_and_grad(joint_loss, argnums=(0, 1, 2))(
+        pa, pb, trunk_p)
+    l_split, g_brs, g_trunk, wires = sp.vertical_split_grads(
+        [br_a, br_b], [pa, pb], trunk, trunk_p, [xa, xb], y, ce)
+    np.testing.assert_allclose(float(l_mono), float(l_split), rtol=1e-6)
+    for gm, gj in zip(jax.tree_util.tree_leaves((g_mono[0], g_mono[1],
+                                                 g_mono[2])),
+                      jax.tree_util.tree_leaves((g_brs[0], g_brs[1],
+                                                 g_trunk))):
+        np.testing.assert_allclose(np.asarray(gm), np.asarray(gj),
+                                   atol=1e-6, rtol=1e-5)
+
+
+def test_lm_split_equals_monolithic():
+    """Cut-layer split on a transformer LM (stacked-scan param slicing)."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("phi4_mini_3_8b").reduced(n_layers=4)
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(11)
+    params = m.init(key)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (2, 16), 0, cfg.vocab)}
+    cut = 2
+
+    l_mono, g_mono = jax.value_and_grad(lambda p: m.loss(p, batch))(params)
+
+    pc, ps = m.split_params(params, cut)
+
+    def split_loss(pc_, ps_):
+        act = m.apply_client(pc_, batch, cut)
+        logits = m.apply_server(ps_, act, cut)
+        labels = batch["labels"]
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return -jnp.take_along_axis(lp, labels[..., None], -1).mean()
+
+    l_split, (g_c, g_s) = jax.value_and_grad(
+        split_loss, argnums=(0, 1))(pc, ps)
+    np.testing.assert_allclose(float(l_mono), float(l_split), rtol=1e-5)
+    # stacked block grads: client slice + server slice == monolithic stack
+    g_mono_blocks = g_mono["groups"][0]["0"]
+    g_join = jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b], axis=0),
+        g_c["groups"][0]["0"], g_s["groups"][0]["0"])
+    for gm, gj in zip(jax.tree_util.tree_leaves(g_mono_blocks),
+                      jax.tree_util.tree_leaves(g_join)):
+        np.testing.assert_allclose(np.asarray(gm, np.float32),
+                                   np.asarray(gj, np.float32),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_extended_vanilla_equals_joint():
+    """Paper §5.1 Fig. 4a: branches -> intermediate client -> server."""
+    key = jax.random.PRNGKey(5)
+    k1, k2, k3, k4, kx = jax.random.split(key, 5)
+    import repro.nn.layers as L
+
+    br_a = sp.Branch(init=lambda k: L.dense_init(k, 10, 8, bias=True),
+                     apply=lambda p, x: jax.nn.relu(L.dense_apply(p, x)))
+    br_b = sp.Branch(init=lambda k: L.dense_init(k, 6, 8, bias=True),
+                     apply=lambda p, x: jax.nn.relu(L.dense_apply(p, x)))
+    pa, pb = br_a.init(k1), br_b.init(k2)
+    p_mid = L.dense_init(k3, 16, 12, bias=True)
+    mid = lambda p, f: jax.nn.relu(L.dense_apply(p, f))
+    p_trunk = L.dense_init(k4, 12, 5, bias=True)
+    trunk = L.dense_apply
+    xa = jax.random.normal(kx, (8, 10))
+    xb = jax.random.normal(kx, (8, 6))
+    y = jax.random.randint(kx, (8,), 0, 5)
+
+    def joint(pa_, pb_, pm_, pt_):
+        f = jnp.concatenate([br_a.apply(pa_, xa), br_b.apply(pb_, xb)], -1)
+        return ce(trunk(pt_, mid(pm_, f)), y)
+
+    l_mono, g_mono = jax.value_and_grad(joint, argnums=(0, 1, 2, 3))(
+        pa, pb, p_mid, p_trunk)
+    l_split, g_brs, g_mid, g_trunk, wires = sp.extended_vanilla_grads(
+        [br_a, br_b], [pa, pb], mid, p_mid, trunk, p_trunk,
+        [xa, xb], y, ce)
+    np.testing.assert_allclose(float(l_mono), float(l_split), rtol=1e-6)
+    for gm, gj in zip(
+            jax.tree_util.tree_leaves((g_mono[0], g_mono[1], g_mono[2],
+                                       g_mono[3])),
+            jax.tree_util.tree_leaves((g_brs[0], g_brs[1], g_mid,
+                                       g_trunk))):
+        np.testing.assert_allclose(np.asarray(gm), np.asarray(gj),
+                                   atol=1e-6, rtol=1e-5)
+    # three ups (2 branches + mid) and three downs
+    ups = [w for w in wires if w.direction == "up"]
+    assert len(ups) == 3
