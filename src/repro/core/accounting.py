@@ -23,9 +23,39 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.nn import module as nn
+
+
+def probe_wire_records(grads_fn, *args) -> list:
+    """Trace `grads_fn(*args, wires)` once under `jax.eval_shape` and
+    return the static `WireRecord`s it emitted.
+
+    Inside `jit`/`scan`/`vmap` bodies the per-turn wire lists cannot be
+    appended to (the body traces once, not once per turn), so the compiled
+    engine probes the wire shapes exactly once per topology + batch shape
+    and then accumulates them analytically (`Meter.add_turn_cost`).  No
+    FLOP is spent: eval_shape only runs the abstract interpreter."""
+    wires: list = []
+    jax.eval_shape(lambda *a: grads_fn(*a, wires)[0], *args)
+    return wires
+
+
+@dataclasses.dataclass(frozen=True)
+class TurnCost:
+    """Static per-turn resource cost of one client turn (precomputed from
+    a traced probe; applied analytically once per turn, outside jit)."""
+    wires: tuple            # tuple[WireRecord]
+    flops: float            # client fwd+bwd flops for one local batch
+    sync_bytes: int         # p2p weight-handoff payload (client params)
+
+    @property
+    def bytes_up(self) -> int:
+        return sum(w.bytes for w in self.wires if w.direction == "up")
+
+    @property
+    def bytes_down(self) -> int:
+        return sum(w.bytes for w in self.wires if w.direction == "down")
 
 
 def flops_of_fn(fn, *args) -> float:
@@ -62,6 +92,16 @@ class Meter:
 
     def add_sync_bytes(self, ci, params):
         self.sync_bytes[ci] += bytes_of_tree(params)
+
+    def add_turn_cost(self, ci, cost: "TurnCost", *, synced: bool = False):
+        """Analytic accumulation of one client turn from a static
+        `TurnCost` — the jit-safe path used by the compiled round engine.
+        Must stay byte-identical to the eager add_wires/add_flops/
+        add_sync_bytes sequence (checked by tests/test_engine.py)."""
+        self.add_flops(ci, cost.flops)
+        self.add_wires(ci, cost.wires)
+        if synced:
+            self.sync_bytes[ci] += cost.sync_bytes
 
     def totals(self) -> dict:
         return {

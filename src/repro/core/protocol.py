@@ -7,6 +7,13 @@ as client-side communication) or not at all ("none").  The server's
 segment updates every step.  Meters accumulate per-client FLOPs and
 wire bytes so the Fig.3 / Tables 1-2 comparisons come from the same
 run loop.
+
+These trainers are now thin API-compatible wrappers: `train_round`
+delegates to the compiled `repro.engine.RoundEngine` (one jitted
+`lax.scan` per round) by default.  `backend="eager"` keeps the original
+per-turn Python loop — it is the reference the engine is verified
+against (tests/test_engine.py) and the baseline in
+benchmarks/engine_bench.py.
 """
 from __future__ import annotations
 
@@ -21,6 +28,13 @@ from repro.core.accounting import Meter, flops_of_fn
 from repro.optim import apply_updates
 
 
+def _engine():
+    """Deferred import: repro.engine imports repro.core.accounting, so a
+    top-level import here would cycle through repro.core.__init__."""
+    from repro import engine
+    return engine
+
+
 @dataclasses.dataclass
 class SplitTrainer:
     model: sp.SegModel
@@ -30,10 +44,27 @@ class SplitTrainer:
     optimizer_server: "Optimizer"
     n_clients: int
     sync: str = "p2p"                       # "p2p" | "none"
+    backend: str = "engine"                 # "engine" | "eager"
+    schedule: str = "round_robin"           # engine backend only
 
     def __post_init__(self):
         self.meter = Meter(self.n_clients)
         self._client_flops_per_batch = None
+        self._engine = None
+
+    @property
+    def engine(self) -> "RoundEngine":
+        if self._engine is None:
+            eng = _engine()
+            self._engine = eng.RoundEngine(
+                topology=eng.topology.vanilla(self.model, self.cut),
+                loss_fn=self.loss_fn,
+                optimizer_client=self.optimizer_client,
+                optimizer_server=self.optimizer_server,
+                n_clients=self.n_clients, schedule=self.schedule,
+                sync=self.sync)
+            self._engine.meter = self.meter     # one shared meter
+        return self._engine
 
     def init(self, key):
         kc, ks = jax.random.split(key)
@@ -50,12 +81,23 @@ class SplitTrainer:
                 "opt_c": opt_c, "opt_s": opt_s, "last_trained": -1}
 
     def train_round(self, state, client_batches: list[dict]):
-        """One round = each client takes one turn (its local batch)."""
-        losses = []
-        for ci, batch in enumerate(client_batches):
-            state, loss = self.client_turn(state, ci, batch)
-            losses.append(loss)
-        return state, jnp.stack(losses).mean()
+        """One round = each client takes one turn (its local batch).
+        backend="engine" runs the whole round as one compiled scan
+        (ragged per-client batch shapes fall back to the eager loop —
+        they cannot stack); backend="eager" is the original reference
+        loop.  The list<->stack state conversion happens every round;
+        loops that care should drive RoundEngine directly on stacked
+        state and skip this wrapper."""
+        if self.backend == "eager" or _ragged(client_batches):
+            losses = []
+            for ci, batch in enumerate(client_batches):
+                state, loss = self.client_turn(state, ci, batch)
+                losses.append(loss)
+            return state, jnp.stack(losses).mean()
+        est = _stack_state(state, self.n_clients)
+        est, losses = self.engine.run_round(
+            est, _engine().stack_batches(client_batches))
+        return _unstack_state(est, self.n_clients), losses.mean()
 
     def client_turn(self, state, ci: int, batch):
         x, y = batch["x"], batch["labels"]
@@ -105,6 +147,33 @@ class SplitTrainer:
         return (jnp.argmax(logits, -1) == batch["labels"]).mean()
 
 
+def _ragged(client_batches: list[dict]) -> bool:
+    """True when per-client batches cannot be stacked along a client
+    axis (unequal shapes, e.g. a dataset-remainder shard)."""
+    sigs = {tuple(sorted((k, tuple(v.shape)) for k, v in b.items()))
+            for b in client_batches}
+    return len(sigs) > 1
+
+
+def _stack_state(state, n: int) -> dict:
+    """Protocol list-of-trees state -> stacked engine state."""
+    eng = _engine()
+    return {"clients": eng.stack_trees(state["clients"]),
+            "server": state["server"],
+            "opt_c": eng.stack_trees(state["opt_c"]),
+            "opt_s": state["opt_s"],
+            "last_trained": jnp.asarray(state["last_trained"], jnp.int32)}
+
+
+def _unstack_state(est, n: int) -> dict:
+    eng = _engine()
+    return {"clients": eng.unstack_tree(est["clients"], n),
+            "server": est["server"],
+            "opt_c": eng.unstack_tree(est["opt_c"], n),
+            "opt_s": est["opt_s"],
+            "last_trained": int(est["last_trained"])}
+
+
 @dataclasses.dataclass
 class UShapedTrainer:
     """Label-private variant: loss computed on the client."""
@@ -117,6 +186,39 @@ class UShapedTrainer:
 
     def __post_init__(self):
         self.meter = Meter(self.n_clients)
+        self._engine = None
+
+    @property
+    def engine(self) -> "RoundEngine":
+        if self._engine is None:
+            eng = _engine()
+            self._engine = eng.RoundEngine(
+                topology=eng.topology.u_shaped(self.model, self.cut1,
+                                               self.cut2),
+                loss_fn=self.loss_fn, optimizer_client=self.optimizer,
+                optimizer_server=self.optimizer,
+                n_clients=self.n_clients, sync="none")
+            self._engine.meter = self.meter
+        return self._engine
+
+    def train_round(self, state, client_batches: list[dict]):
+        """One compiled round-robin round (no weight handoff — the
+        u-shaped configuration keeps clients independent)."""
+        eng = _engine()
+        est = {"clients": eng.stack_trees(state["clients"]),
+               "server": state["server"],
+               "opt_c": eng.stack_trees(state["opt"]["clients"]),
+               "opt_s": state["opt"]["server"],
+               "last_trained": jnp.asarray(-1, jnp.int32)}
+        est, losses = self.engine.run_round(
+            est, eng.stack_batches(client_batches))
+        state = {"clients": eng.unstack_tree(est["clients"],
+                                             self.n_clients),
+                 "server": est["server"],
+                 "opt": {"clients": eng.unstack_tree(est["opt_c"],
+                                                     self.n_clients),
+                         "server": est["opt_s"]}}
+        return state, losses.mean()
 
     def init(self, key):
         full = self.model.init(key)

@@ -4,7 +4,6 @@ from __future__ import annotations
 from typing import Callable, Iterator
 
 import jax
-import jax.numpy as jnp
 
 
 class DataPipeline:

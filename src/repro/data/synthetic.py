@@ -10,8 +10,6 @@ Offline container: no dataset downloads.  Two families:
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,10 @@
+"""Compiled multi-client round engine (scan / vmap schedules over
+declarative split topologies)."""
+from repro.engine.engine import (RoundEngine, stack_batches, stack_trees,
+                                 tree_index, tree_update, unstack_tree)
+from repro.engine.topology import (Topology, multihop, u_shaped, vanilla,
+                                   vanilla_fns, vertical)
+
+__all__ = ["RoundEngine", "Topology", "vanilla", "vanilla_fns", "u_shaped",
+           "vertical", "multihop", "stack_batches", "stack_trees",
+           "unstack_tree", "tree_index", "tree_update"]

@@ -1,0 +1,223 @@
+"""Declarative split-learning topologies.
+
+A `Topology` names *where* the cut(s) fall and lowers onto the explicit
+`jax.vjp` grad functions in `repro.core.split` — it owns no scheduling.
+The compiled `RoundEngine` consumes the uniform (client, server) contract:
+
+    init(key)                       -> (client_params, server_params)
+    turn_grads(pc, ps, batch, lf)   -> (loss, g_client, g_server)
+    turn_grads_wires(..., wires)    -> same, appending WireRecords
+
+Four paper configurations (Gupta & Raskar §3; Ceballos et al. 2020 for
+vertical; Fig. 4 for multi-hop):
+
+  vanilla   — client [0, cut), server [cut, L) + loss
+  u_shaped  — client head+tail, server mid; labels never cross
+  vertical  — K modality branches -> concat -> server trunk (parallel-only)
+  multihop  — Tor-like slab chain; client owns the first slab, the
+              remaining slabs + loss run server-side
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import split as sp
+
+KINDS = ("vanilla", "u_shaped", "vertical", "multihop")
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    kind: str
+    init: Callable                # key -> (client_params, server_params)
+    turn_grads: Callable          # (pc, ps, batch, loss_fn) -> (loss, g_c, g_s)
+    turn_grads_wires: Callable    # (pc, ps, batch, loss_fn, wires) -> same
+    evaluate: Callable | None = None   # (pc, ps, batch) -> logits
+    client_fwd: Callable | None = None  # (pc, batch) -> first outbound act
+    # vertical only: all clients contribute to ONE step
+    round_grads: Callable | None = None  # (clients, ps, batch, loss_fn)
+
+    @property
+    def parallel_only(self) -> bool:
+        return self.round_grads is not None
+
+
+def _drop_wires(turn_grads_wires):
+    def turn_grads(pc, ps, batch, loss_fn):
+        return turn_grads_wires(pc, ps, batch, loss_fn, [])
+    return turn_grads
+
+
+# ---------------------------------------------------------------------------
+# vanilla
+# ---------------------------------------------------------------------------
+
+def vanilla(model: sp.SegModel, cut: int) -> Topology:
+    def init(key):
+        full = model.init(key)
+        return (model.param_slice(full, 0, cut),
+                model.param_slice(full, cut, model.n_segments))
+
+    def turn_grads_wires(pc, ps, batch, loss_fn, wires):
+        loss, g_c, g_s, _ = sp.vanilla_split_grads(
+            model, cut, pc, ps, batch["x"], batch["labels"], loss_fn, wires)
+        return loss, g_c, g_s
+
+    def evaluate(pc, ps, batch):
+        act = model.apply_range(pc, batch["x"], 0, cut)
+        if sp._takes_offset(model):
+            return model.apply_range(ps, act, cut, model.n_segments,
+                                     offset=cut)
+        return model.apply_range(ps, act, cut, model.n_segments)
+
+    return Topology(kind="vanilla", init=init,
+                    turn_grads=_drop_wires(turn_grads_wires),
+                    turn_grads_wires=turn_grads_wires, evaluate=evaluate,
+                    client_fwd=lambda pc, b: model.apply_range(
+                        pc, b["x"], 0, cut))
+
+
+def vanilla_fns(init_full: Callable, split: Callable, client_apply: Callable,
+                server_apply: Callable) -> Topology:
+    """Vanilla topology over opaque client/server apply functions (the
+    `models.lm.LM` split hooks) instead of a SegModel.  Same wire protocol
+    as `core.split.vanilla_split_grads`: only the cut activation (up) and
+    its gradient (down) cross."""
+    def init(key):
+        return split(init_full(key))
+
+    def turn_grads_wires(pc, ps, batch, loss_fn, wires):
+        act, vjp_c = jax.vjp(lambda p: client_apply(p, batch), pc)
+        sp.record(wires, "cut_act", act, "up")
+        (loss,), vjp_s = jax.vjp(
+            lambda p, a: (loss_fn(server_apply(p, a), batch["labels"]),),
+            ps, act)
+        g_s, g_act = vjp_s((jnp.ones(()),))
+        sp.record(wires, "cut_grad", g_act, "down")
+        (g_c,) = vjp_c(g_act)
+        return loss, g_c, g_s
+
+    def evaluate(pc, ps, batch):
+        return server_apply(ps, client_apply(pc, batch))
+
+    return Topology(kind="vanilla", init=init,
+                    turn_grads=_drop_wires(turn_grads_wires),
+                    turn_grads_wires=turn_grads_wires, evaluate=evaluate,
+                    client_fwd=client_apply)
+
+
+# ---------------------------------------------------------------------------
+# u-shaped (label-private)
+# ---------------------------------------------------------------------------
+
+def u_shaped(model: sp.SegModel, cut1: int, cut2: int) -> Topology:
+    def init(key):
+        full = model.init(key)
+        client = {"head": model.param_slice(full, 0, cut1),
+                  "tail": model.param_slice(full, cut2, model.n_segments)}
+        return client, model.param_slice(full, cut1, cut2)
+
+    def turn_grads_wires(pc, ps, batch, loss_fn, wires):
+        loss, g_head, g_mid, g_tail, _ = sp.u_shaped_grads(
+            model, cut1, cut2, pc["head"], ps, pc["tail"],
+            batch["x"], batch["labels"], loss_fn, wires)
+        return loss, {"head": g_head, "tail": g_tail}, g_mid
+
+    def evaluate(pc, ps, batch):
+        act = model.apply_range(pc["head"], batch["x"], 0, cut1)
+        act = sp._apply_mid(model, ps, act, cut1, cut2)
+        return sp._apply_tail(model, pc["tail"], act, cut2)
+
+    # client_fwd=None: the eager UShapedTrainer meters no FLOPs for the
+    # label-private configuration (the client share is head+tail and the
+    # tail fwd needs the mid activation, which a (pc, batch) probe cannot
+    # see) — metering only the head would both undercount the true client
+    # compute and diverge from the eager reference.
+    return Topology(kind="u_shaped", init=init,
+                    turn_grads=_drop_wires(turn_grads_wires),
+                    turn_grads_wires=turn_grads_wires, evaluate=evaluate)
+
+
+# ---------------------------------------------------------------------------
+# vertical (multi-modal, parallel-only)
+# ---------------------------------------------------------------------------
+
+def vertical(branch: sp.Branch, n_clients: int, trunk_init: Callable,
+             trunk_apply: Callable) -> Topology:
+    """K clients each hold one modality and one (structurally identical)
+    feature branch; the server concatenates features into the trunk.
+    Round-robin makes no sense here — every step needs all branches — so
+    the engine forces schedule="parallel" via `round_grads`.
+
+    Batch layout: {"x": (K, B, ...), "labels": (B,)} — modality i at
+    x[i], labels aligned across clients (server-held)."""
+    def init(key):
+        kb, kt = jax.random.split(key)
+        return branch.init(kb), trunk_init(kt)
+
+    def round_grads_wires(clients, ps, batch, loss_fn, wires):
+        params_list = [jax.tree_util.tree_map(lambda a, i=i: a[i], clients)
+                       for i in range(n_clients)]
+        xs = [batch["x"][i] for i in range(n_clients)]
+        loss, g_branches, g_trunk, _ = sp.vertical_split_grads(
+            [branch] * n_clients, params_list, trunk_apply, ps, xs,
+            batch["labels"], loss_fn, wires)
+        g_clients = jax.tree_util.tree_map(
+            lambda *gs: jnp.stack(gs), *g_branches)
+        return loss, g_clients, g_trunk
+
+    def round_grads(clients, ps, batch, loss_fn):
+        return round_grads_wires(clients, ps, batch, loss_fn, [])
+
+    def evaluate(clients, ps, batch):
+        feats = [branch.apply(
+            jax.tree_util.tree_map(lambda a, i=i: a[i], clients),
+            batch["x"][i]) for i in range(n_clients)]
+        return trunk_apply(ps, jnp.concatenate(feats, axis=-1))
+
+    return Topology(kind="vertical", init=init,
+                    turn_grads=None, turn_grads_wires=round_grads_wires,
+                    evaluate=evaluate, round_grads=round_grads,
+                    client_fwd=lambda pc, b: branch.apply(pc, b["x"][0]))
+
+
+# ---------------------------------------------------------------------------
+# multi-hop (Tor-like)
+# ---------------------------------------------------------------------------
+
+def multihop(model: sp.SegModel, cuts: list[int]) -> Topology:
+    """Slab chain [0,c0) | [c0,c1) | ... | [c_last, L).  The data-holding
+    client owns the first slab; the downstream hops + loss are the
+    "server" side (a tuple of slab trees), so N data clients can still
+    round-robin against the shared chain."""
+    cuts = list(cuts)
+
+    def init(key):
+        full = model.init(key)
+        bounds = [0] + cuts + [model.n_segments]
+        slabs = [model.param_slice(full, bounds[i], bounds[i + 1])
+                 for i in range(len(bounds) - 1)]
+        return slabs[0], tuple(slabs[1:])
+
+    def turn_grads_wires(pc, ps, batch, loss_fn, wires):
+        loss, grads, _ = sp.multihop_grads(
+            model, cuts, [pc] + list(ps), batch["x"], batch["labels"],
+            loss_fn, wires)
+        return loss, grads[0], tuple(grads[1:])
+
+    def evaluate(pc, ps, batch):
+        bounds = [0] + cuts + [model.n_segments]
+        act = batch["x"]
+        for i, slab in enumerate([pc] + list(ps)):
+            act = sp._apply_hop(model, slab, act, bounds[i], bounds[i + 1])
+        return act
+
+    return Topology(kind="multihop", init=init,
+                    turn_grads=_drop_wires(turn_grads_wires),
+                    turn_grads_wires=turn_grads_wires, evaluate=evaluate,
+                    client_fwd=lambda pc, b: model.apply_range(
+                        pc, b["x"], 0, cuts[0]))

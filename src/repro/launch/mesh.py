@@ -15,21 +15,27 @@ sharded dim (falling back to replication, never to a compile error).
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.nn import module as nn
 
 
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions: `axis_types` (and
+    jax.sharding.AxisType itself) only exist on newer jax; older
+    releases default every axis to Auto anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def batch_axes(mesh) -> tuple:

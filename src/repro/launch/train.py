@@ -3,14 +3,21 @@
 Two modes:
   * monolithic  — standard data-parallel training of any --arch;
   * split       — the paper's protocol: client segment + server segment,
-    one pjit program, only the cut activation crossing the tiers.
+    only the cut activation crossing the tiers.  With --n-clients > 1
+    the compiled `repro.engine.RoundEngine` runs one whole round-robin
+    (or SplitFed-parallel, --schedule parallel) round per jitted call
+    and meters per-client wire bytes; --n-clients 1 keeps the single
+    fused pjit program.
 
 On this CPU container run reduced configs (--reduced); on a real pod the
 same driver takes the full configs (the dry-run proves they lower).
 
-Example:
+Examples:
     PYTHONPATH=src python -m repro.launch.train \
         --arch phi4_mini_3_8b --reduced --steps 100 --mode split --cut 1
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch phi4_mini_3_8b --reduced --steps 20 --mode split \
+        --n-clients 4 --schedule round_robin --topology vanilla
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ from repro import checkpoint as ckpt
 from repro import optim
 from repro.configs import get_config
 from repro.data import synthetic as syn
+from repro.engine import RoundEngine, topology
 from repro.models import build_model
 
 
@@ -87,6 +95,35 @@ def train_split(model, args, key):
     return (pc, ps, sc, ss), step
 
 
+def train_split_engine(model, args, key):
+    """Multi-client split training via the compiled round engine: one
+    jitted program per round, round-robin (paper §3) or SplitFed-parallel
+    scheduling, per-client wire accounting for free."""
+    if args.topology != "vanilla":
+        raise SystemExit(
+            f"--topology {args.topology}: the LM launch path exposes the "
+            "vanilla cut only (apply_client/apply_server).  u_shaped / "
+            "vertical / multihop topologies run through repro.engine "
+            "directly — see tests/test_engine.py and README.")
+
+    topo = topology.vanilla_fns(
+        init_full=model.init,
+        split=lambda p: model.split_params(p, args.cut),
+        client_apply=lambda pc, b: model.apply_client(pc, b, args.cut),
+        server_apply=lambda ps, a: model.apply_server(ps, a, args.cut))
+
+    def loss_fn(logits, labels):
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        return -jnp.take_along_axis(lp, labels[..., None], -1).mean()
+
+    eng = RoundEngine(
+        topology=topo, loss_fn=loss_fn,
+        optimizer_client=optim.adamw(args.lr, weight_decay=0.01),
+        optimizer_server=optim.adamw(args.lr, weight_decay=0.01),
+        n_clients=args.n_clients, schedule=args.schedule)
+    return eng, eng.init(key)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -98,9 +135,17 @@ def main():
     ap.add_argument("--mode", choices=["monolithic", "split"],
                     default="monolithic")
     ap.add_argument("--cut", type=int, default=-1)
+    ap.add_argument("--n-clients", type=int, default=1)
+    ap.add_argument("--schedule", choices=["round_robin", "parallel"],
+                    default="round_robin")
+    ap.add_argument("--topology",
+                    choices=["vanilla", "u_shaped", "vertical", "multihop"],
+                    default="vanilla")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+    if args.n_clients < 1:
+        ap.error("--n-clients must be >= 1")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -112,6 +157,7 @@ def main():
     batch_fn = make_batch_fn(cfg, args.batch, args.seq)
 
     history = []
+    extra: dict = {}
     t0 = time.time()
     if args.mode == "monolithic":
         params, opt_state, step = train_monolithic(model, args, key)
@@ -126,6 +172,29 @@ def main():
                       f"gnorm {float(gnorm):.3f}", flush=True)
         if args.ckpt:
             ckpt.save(args.ckpt, params, step=args.steps)
+    elif args.n_clients > 1:
+        from repro.engine import stack_batches
+        eng, state = train_split_engine(model, args, key)
+        for i in range(args.steps):
+            key, k = jax.random.split(key)
+            batches = stack_batches(
+                [batch_fn(kk) for kk in jax.random.split(k, args.n_clients)])
+            state, losses = eng.run_round(state, batches)
+            loss = losses.mean()
+            if i % args.log_every == 0 or i == args.steps - 1:
+                history.append({"step": i, "loss": float(loss)})
+                print(f"round {i:5d} split-loss {float(loss):.4f} "
+                      f"({args.schedule}, {args.n_clients} clients)",
+                      flush=True)
+        extra = {"n_clients": args.n_clients, "schedule": args.schedule,
+                 "topology": args.topology,
+                 "client_gb": [round(g, 6) for g in
+                               eng.meter.totals()["client_gb"]]}
+        if args.ckpt:
+            ckpt.save(args.ckpt + ".clients", state["clients"],
+                      step=args.steps)
+            ckpt.save(args.ckpt + ".server", state["server"],
+                      step=args.steps)
     else:
         state, step = train_split(model, args, key)
         for i in range(args.steps):
@@ -139,10 +208,12 @@ def main():
             ckpt.save(args.ckpt + ".server", state[1], step=args.steps)
 
     dt = time.time() - t0
-    print(json.dumps({"arch": cfg.name, "mode": args.mode,
-                      "steps": args.steps, "wall_s": round(dt, 1),
-                      "first_loss": history[0]["loss"],
-                      "final_loss": history[-1]["loss"]}))
+    summary = {"arch": cfg.name, "mode": args.mode,
+               "steps": args.steps, "wall_s": round(dt, 1),
+               "first_loss": history[0]["loss"],
+               "final_loss": history[-1]["loss"]}
+    summary.update(extra)
+    print(json.dumps(summary))
 
 
 if __name__ == "__main__":

@@ -18,8 +18,6 @@ the two sides with only the cut activation in between.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

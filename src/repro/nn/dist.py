@@ -8,6 +8,14 @@ this version, so launchers register the mesh explicitly before tracing:
 """
 from __future__ import annotations
 
+import jax
+
+# jax >= 0.5 exposes shard_map at top level; 0.4.x keeps it experimental
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
 _MESH = None
 
 

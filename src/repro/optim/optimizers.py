@@ -2,8 +2,7 @@
 implemented from scratch — no optax dependency)."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

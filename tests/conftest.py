@@ -8,6 +8,14 @@ import jax
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running system/perf tests excluded from the CI tier-1 "
+        'lane (run with -m "not slow"); the full suite stays available '
+        "locally via plain pytest")
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)

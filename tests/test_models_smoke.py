@@ -11,6 +11,8 @@ from repro import optim
 from repro.configs import ARCH_IDS, get_config
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow
+
 
 def make_batch(cfg, key, B=2, S=16):
     toks = jax.random.randint(key, (B, S), 0, cfg.vocab)

@@ -2,7 +2,6 @@
 train; SplitNN's client resource meters show the paper's asymmetry."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro import optim
 from repro.core import baselines as bl
@@ -39,12 +38,12 @@ def client_shards(key, n_clients, per=16):
 
 def test_split_trainer_learns():
     tr = pr.SplitTrainer(model=make_model(), cut=2, loss_fn=ce,
-                         optimizer_client=optim.sgd(0.05, 0.9),
-                         optimizer_server=optim.sgd(0.05, 0.9), n_clients=3)
+                         optimizer_client=optim.adamw(1e-2),
+                         optimizer_server=optim.adamw(1e-2), n_clients=3)
     key = jax.random.PRNGKey(0)
     state = tr.init(key)
     losses = []
-    for r in range(10):
+    for r in range(20):
         key, k = jax.random.split(key)
         state, loss = tr.train_round(state, client_shards(k, 3))
         losses.append(float(loss))
@@ -57,11 +56,11 @@ def test_split_trainer_learns():
 
 def test_u_shaped_trainer_learns_without_label_wire():
     tr = pr.UShapedTrainer(model=make_model(), cut1=1, cut2=4, loss_fn=ce,
-                           optimizer=optim.adamw(3e-3), n_clients=2)
+                           optimizer=optim.adamw(1e-2), n_clients=2)
     key = jax.random.PRNGKey(1)
     state = tr.init(key)
     losses = []
-    for r in range(20):
+    for r in range(30):
         key, k = jax.random.split(key)
         shards = client_shards(k, 2, per=32)
         for ci, b in enumerate(shards):

@@ -127,6 +127,7 @@ def test_vertical_split_equals_joint():
                                    atol=1e-6, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_lm_split_equals_monolithic():
     """Cut-layer split on a transformer LM (stacked-scan param slicing)."""
     from repro.configs import get_config

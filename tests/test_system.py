@@ -11,6 +11,7 @@ The flagship scenarios, each mapped to a paper configuration:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import optim
 from repro.configs import get_config
@@ -18,6 +19,8 @@ from repro.core import baselines as bl
 from repro.core import split as sp
 from repro.data import synthetic as syn
 from repro.models import build_model
+
+pytestmark = pytest.mark.slow
 
 
 def test_split_lm_training_loss_drops():
