@@ -11,15 +11,19 @@ same model/batch/optimizer:
     parallel  — RoundEngine parallel (SplitFed-style vmap)
 
 Usage:  PYTHONPATH=src python benchmarks/engine_bench.py \
-            [--n-clients 8] [--rounds 30] [--per-client-batch 8]
+            [--n-clients 8] [--rounds 30] [--per-client-batch 8] \
+            [--out BENCH_engine.json]
 
 Acceptance target (ISSUE 1): scanned >= 2x eager steps/sec at
-n_clients=8 on CPU.
+n_clients=8 on CPU.  Writes a machine-readable `BENCH_engine.json` at
+the repo root (per-schedule steps/sec + speedup vs eager) so the bench
+trajectory is tracked over time; CI uploads it as an artifact.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import time
 
 import jax
@@ -99,11 +103,15 @@ def bench_engine(n, data, key, schedule):
     return dt, eng.meter
 
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-clients", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--per-client-batch", type=int, default=8)
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_engine.json"))
     args = ap.parse_args()
     n, rounds, per = args.n_clients, args.rounds, args.per_client_batch
     key = jax.random.PRNGKey(0)
@@ -127,13 +135,20 @@ def main():
               f"{results[name]['wall_s']:7.3f}s  "
               f"{results[name]['bytes_per_client_mb']:8.3f} MB/client")
 
-    speedup = (results["scanned"]["steps_per_sec"]
-               / results["eager"]["steps_per_sec"])
-    results["scanned_vs_eager_speedup"] = round(speedup, 2)
-    print(f"scanned vs eager speedup: {speedup:.2f}x "
+    results["scanned_vs_eager_speedup"] = round(
+        results["scanned"]["steps_per_sec"]
+        / results["eager"]["steps_per_sec"], 2)
+    results["parallel_vs_eager_speedup"] = round(
+        results["parallel"]["steps_per_sec"]
+        / results["eager"]["steps_per_sec"], 2)
+    print(f"scanned vs eager speedup: "
+          f"{results['scanned_vs_eager_speedup']:.2f}x "
           f"(target >= 2x at n_clients=8)")
-    print(json.dumps({"n_clients": n, "rounds": rounds,
-                      "per_client_batch": per, **results}))
+    payload = {"bench": "engine", "n_clients": n, "rounds": rounds,
+               "per_client_batch": per, **results}
+    print(json.dumps(payload))
+    pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

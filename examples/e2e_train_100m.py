@@ -1,7 +1,7 @@
-"""End-to-end driver (deliverable b): train a ~100M-param transformer for a
-few hundred steps with the SPLIT protocol, demonstrating the full stack —
-model registry, split partitioning, data pipeline, optimizer, clipping,
-checkpointing, eval.
+"""End-to-end driver: train a ~100M-param transformer for a few hundred
+steps with the SPLIT protocol through the Plan API, demonstrating the
+full stack — model registry, Plan -> compiled Session, warmup-cosine
+schedule, clipping, wire accounting, checkpointing, eval.
 
 The ~100M model (12 layers, d=512, vocab 8192) takes a while on this
 1-core CPU container; pass --tiny for a 2-layer sanity run (CI uses it).
@@ -17,8 +17,10 @@ import jax.numpy as jnp
 
 from repro import checkpoint as ckpt
 from repro import optim
+from repro.api import Plan, lm_split_fns
 from repro.configs import get_config
 from repro.data import synthetic as syn
+from repro.engine import tree_index
 from repro.models import build_model
 
 ap = argparse.ArgumentParser()
@@ -41,52 +43,33 @@ else:
 
 model = build_model(cfg)
 key = jax.random.PRNGKey(0)
-params = model.init(key)
 from repro.nn.module import param_count
-print(f"arch={cfg.name}-custom params={param_count(params) / 1e6:.1f}M "
-      f"steps={steps}")
+print(f"arch={cfg.name}-custom "
+      f"params={param_count(model.init(key)) / 1e6:.1f}M steps={steps}")
 
 CUT = max(1, cfg.n_layers // 4)
-pc, ps = model.split_params(params, CUT)
 sched = optim.schedules.warmup_cosine(3e-3, steps // 10, steps)
-opt = optim.adamw(sched, weight_decay=0.01)
-sc, ss = opt.init(pc), opt.init(ps)
 
-
-def split_loss(pc_, ps_, b):
-    act = model.apply_client(pc_, b, CUT)
-    logits = model.apply_server(ps_, act, CUT)
-    lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-    return -jnp.take_along_axis(lp, b["labels"][..., None], -1).mean()
-
-
-@jax.jit
-def step(pc_, ps_, sc_, ss_, b):
-    loss, (gc, gs) = jax.value_and_grad(split_loss, argnums=(0, 1))(
-        pc_, ps_, b)
-    gc, _ = optim.clip_by_global_norm(gc, 1.0)
-    gs, _ = optim.clip_by_global_norm(gs, 1.0)
-    uc, sc_ = opt.update(gc, sc_, pc_)
-    us, ss_ = opt.update(gs, ss_, ps_)
-    return optim.apply_updates(pc_, uc), optim.apply_updates(ps_, us), \
-        sc_, ss_, loss
-
+sess = Plan(mode="vanilla", model=lm_split_fns(model, CUT), cut=CUT,
+            optimizer=optim.adamw(sched, weight_decay=0.01),
+            clip_norm=1.0).compile()
+sess.init(key)
 
 gen = syn.lm_stream(key, batch=batch, seq=seq, vocab=cfg.vocab)
 t0 = time.time()
-hist = []
-for i in range(steps):
-    pc, ps, sc, ss, loss = step(pc, ps, sc, ss, next(gen))
-    hist.append(float(loss))
-    if i % max(1, steps // 10) == 0:
-        tok_s = batch * seq * (i + 1) / (time.time() - t0)
-        print(f"step {i:4d}  loss {hist[-1]:.4f}  tok/s {tok_s:,.0f}")
+hist = sess.fit(([next(gen)] for _ in range(steps)),
+                log_every=max(1, steps // 10))
+tok_s = batch * seq * steps / (time.time() - t0)
 
+pc = tree_index(sess.state["clients"], 0)
 ckpt.save("/tmp/e2e_client", pc, step=steps)
-ckpt.save("/tmp/e2e_server", ps, step=steps)
-restored = ckpt.restore("/tmp/e2e_client", jax.eval_shape(lambda: pc))
+ckpt.save("/tmp/e2e_server", sess.state["server"], step=steps)
+ckpt.restore("/tmp/e2e_client", jax.eval_shape(lambda: pc))
 print(f"checkpoint roundtrip ok "
       f"({ckpt.load_manifest('/tmp/e2e_client')['step']} steps)")
-print(f"loss: {hist[0]:.3f} -> {hist[-1]:.3f}  wall={time.time() - t0:.0f}s")
+print(f"client wire: {sess.meter()['client_gb'][0]:.3f} GB over {steps} "
+      f"turns; tok/s {tok_s:,.0f}")
+print(f"loss: {hist[0]:.3f} -> {hist[-1]:.3f}  "
+      f"wall={time.time() - t0:.0f}s")
 assert hist[-1] < hist[0] - 0.5
 print("OK")

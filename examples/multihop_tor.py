@@ -1,15 +1,16 @@
-"""Tor-like multi-hop split learning (paper §5.1, Fig. 4c).
+"""Tor-like multi-hop split learning (paper §5.1, Fig. 4c) via the Plan
+API.
 
-A chain of clients each owns a contiguous slab of layers; activations hop
+A chain of parties each owns a contiguous slab of layers; activations hop
 client -> client -> ... -> server, gradients hop back.  No hop ever sees
 another hop's weights or the raw data (only hop 0 holds the input).
 
     PYTHONPATH=src python examples/multihop_tor.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro import optim
+from repro.api import Plan, softmax_xent
 from repro.core import split as sp
 from repro.data import synthetic as syn
 from repro.nn import convnets as C
@@ -19,42 +20,27 @@ STEPS = 40
 
 cfg = C.CNNConfig(name="hops", width_mult=0.25,
                   plan=(16, 16, "M", 32, "M"), n_classes=4)
-plan = C.vgg_plan(cfg)
+plan_layers = C.vgg_plan(cfg)
 model = sp.list_segmodel(
-    n_segments=len(plan),
+    n_segments=len(plan_layers),
     init=lambda k: C.vgg_init(k, cfg),
-    layer_apply=lambda p, i, x: C.vgg_layer_apply(p, plan[i], x))
+    layer_apply=lambda p, i, x: C.vgg_layer_apply(p, plan_layers[i], x))
 
-
-def ce(logits, labels):
-    lp = jax.nn.log_softmax(logits)
-    return -jnp.take_along_axis(lp, labels[:, None], 1).mean()
-
-
+sess = Plan(mode="multihop", model=model, cuts=CUTS, n_clients=1,
+            loss_fn=softmax_xent, optimizer=optim.adamw(3e-3)).compile()
 key = jax.random.PRNGKey(0)
-params = model.init(key)
-bounds = [0] + CUTS + [model.n_segments]
-slabs = [model.param_slice(params, bounds[i], bounds[i + 1])
-         for i in range(len(bounds) - 1)]
-opt = optim.adamw(3e-3)
-states = [opt.init(s) for s in slabs]
+sess.init(key)
 
-first = last = None
-for i in range(STEPS):
-    key, k = jax.random.split(key)
-    b = syn.image_batch(k, 64, 4)
-    loss, grads, wires = sp.multihop_grads(
-        model, CUTS, slabs, b["images"], b["labels"], ce)
-    for j in range(len(slabs)):
-        u, states[j] = opt.update(grads[j], states[j], slabs[j])
-        slabs[j] = optim.apply_updates(slabs[j], u)
-    if i == 0:
-        first = float(loss)
-        print("hops on the wire:", [w.name for w in wires])
-    last = float(loss)
-    if i % 10 == 0:
-        print(f"step {i:3d}  loss {float(loss):.4f}")
 
-print(f"\nloss {first:.3f} -> {last:.3f} across {len(slabs)} hops")
-assert last < first
+def batches(r):
+    b = syn.image_batch(jax.random.fold_in(key, r), 64, 4)
+    return [{"x": b["images"], "labels": b["labels"]}]
+
+
+losses = sess.fit(batches, rounds=STEPS, log_every=10)
+print("hops on the wire:",
+      [w["name"] for w in sess.wire_report(batches(0))])
+print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} across "
+      f"{len(CUTS) + 1} slabs")
+assert losses[-1] < losses[0]
 print("OK")

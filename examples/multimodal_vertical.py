@@ -1,13 +1,15 @@
-"""The paper's motivating health scenario (§2, vertical configuration):
+"""The paper's motivating health scenario (§2, vertical configuration)
+via the Plan API:
 
-    radiology center  (vision modality)  \
-                                           -> diagnosis server (trunk)
-    pathology lab     (tabular modality) /
+    radiology center  (imaging features)  \
+                                            -> diagnosis server (trunk)
+    pathology lab     (lab-test features) /
 
 Neither institution shares raw data; each trains a private branch network
 and ships ONLY its cut-layer features.  The server concatenates the
 features (fused splitcat kernel on TPU) and trains the diagnosis trunk.
-Leakage of each branch's wire is quantified by distance correlation.
+Leakage of each branch's wire is quantified by distance correlation —
+`Session.leakage_report` measures it through the wire middleware stack.
 
     PYTHONPATH=src python examples/multimodal_vertical.py
 """
@@ -16,72 +18,59 @@ import jax.numpy as jnp
 
 import repro.nn.layers as L
 from repro import optim
+from repro.api import Plan, leakage_probe, softmax_xent
 from repro.core import split as sp
-from repro.core.privacy import distance_correlation
 from repro.data import synthetic as syn
 from repro.kernels import ops
 
 N_CLASSES = 4
+DIM = 56                 # features per institution
+DFEAT = 20               # cut-layer features each ships
 STEPS = 80
 
+branch = sp.Branch(
+    init=lambda k: {"l1": L.dense_init(k, DIM, 40, bias=True),
+                    "l2": L.dense_init(k, 40, DFEAT, bias=True)},
+    apply=lambda p, x: L.dense_apply(
+        p["l2"], jax.nn.relu(L.dense_apply(p["l1"], x))))
+
+trunk_init = lambda k: L.dense_init(k, 2 * DFEAT, N_CLASSES, bias=True)
+trunk_apply = lambda p, feats: L.dense_apply(p, feats)
+
+sess = Plan(mode="vertical", branch=branch, n_clients=2,
+            trunk=(trunk_init, trunk_apply), loss_fn=softmax_xent,
+            optimizer=optim.adamw(5e-3),
+            wire=[leakage_probe()]).compile()
 key = jax.random.PRNGKey(0)
-k1, k2, k3 = jax.random.split(key, 3)
+sess.init(key)
 
 
-def mk_branch(din, hidden, dout):
-    return sp.Branch(
-        init=lambda k: {"l1": L.dense_init(k, din, hidden, bias=True),
-                        "l2": L.dense_init(k, hidden, dout, bias=True)},
-        apply=lambda p, x: L.dense_apply(
-            p["l2"], jax.nn.relu(L.dense_apply(p["l1"], x))))
+def batch(r):
+    b = syn.multimodal_batch(jax.random.fold_in(key, r), 64, N_CLASSES,
+                             dim_a=DIM, dim_b=DIM)
+    return {"x": jnp.stack([b["mod_a"], b["mod_b"]]), "labels": b["labels"]}
 
 
-radiology = mk_branch(64, 48, 24)      # imaging features
-pathology = mk_branch(48, 32, 16)      # lab-test features
-p_rad, p_path = radiology.init(k1), pathology.init(k2)
-trunk_params = L.dense_init(k3, 40, N_CLASSES, bias=True)
-
-
-def trunk(p, feats):
-    return L.dense_apply(p, feats)
-
-
-def ce(logits, labels):
-    lp = jax.nn.log_softmax(logits)
-    return -jnp.take_along_axis(lp, labels[:, None], 1).mean()
-
-
-opt = optim.adamw(5e-3)
-states = [opt.init(p_rad), opt.init(p_path), opt.init(trunk_params)]
-
-for i in range(STEPS):
-    key, k = jax.random.split(key)
-    b = syn.multimodal_batch(k, 64, N_CLASSES)
-    loss, g_brs, g_trunk, wires = sp.vertical_split_grads(
-        [radiology, pathology], [p_rad, p_path], trunk, trunk_params,
-        [b["mod_a"], b["mod_b"]], b["labels"], ce)
-    u, states[0] = opt.update(g_brs[0], states[0], p_rad)
-    p_rad = optim.apply_updates(p_rad, u)
-    u, states[1] = opt.update(g_brs[1], states[1], p_path)
-    p_path = optim.apply_updates(p_path, u)
-    u, states[2] = opt.update(g_trunk, states[2], trunk_params)
-    trunk_params = optim.apply_updates(trunk_params, u)
-    if i % 20 == 0:
-        print(f"step {i:3d}  loss {float(loss):.4f}  wires: "
-              + ", ".join(f"{w.name}{w.shape}" for w in wires[:2]))
+losses = sess.fit(batch, rounds=STEPS, log_every=20)
+print("wires:", [f"{w['name']}{w['shape']}" for w in
+                 sess.wire_report(batch(0))])
 
 # evaluation — also demonstrates the fused splitcat server entry
-ev = syn.multimodal_batch(jax.random.PRNGKey(99), 256, N_CLASSES)
-fa = radiology.apply(p_rad, ev["mod_a"])
-fb = pathology.apply(p_path, ev["mod_b"])
+ev = batch(9999)
+acc = float(sess.evaluate(ev))
+p_rad = jax.tree_util.tree_map(lambda a: a[0], sess.state["clients"])
+p_path = jax.tree_util.tree_map(lambda a: a[1], sess.state["clients"])
+fa, fb = branch.apply(p_rad, ev["x"][0]), branch.apply(p_path, ev["x"][1])
+tp = sess.state["server"]
 # server computes trunk(concat) WITHOUT materializing the concat:
-logits = ops.splitcat_linear([fa, fb], trunk_params["w"],
-                             trunk_params["b"], interpret=True)
-acc = float((jnp.argmax(logits, -1) == ev["labels"]).mean())
+logits = ops.splitcat_linear([fa, fb], tp["w"], tp["b"], interpret=True)
+acc_fused = float((jnp.argmax(logits, -1) == ev["labels"]).mean())
+assert abs(acc - acc_fused) < 1e-6
 
 print(f"\ndiagnosis accuracy (multi-modal, no raw sharing): {acc:.3f}")
 print("leakage (distance correlation, raw vs wire):")
-print(f"  radiology: {float(distance_correlation(ev['mod_a'], fa)):.3f}")
-print(f"  pathology: {float(distance_correlation(ev['mod_b'], fb)):.3f}")
+for name, ci in (("radiology", 0), ("pathology", 1)):
+    rep = sess.leakage_report(ev, client=ci)
+    print(f"  {name}: {rep['dcor_input_vs_act']:.3f}")
 assert acc > 0.8
 print("OK")

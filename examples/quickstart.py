@@ -1,16 +1,16 @@
-"""Quickstart: train a small transformer with SplitNN in ~60 lines.
+"""Quickstart: train a small transformer with SplitNN via the Plan API.
 
 Two parties: a client (owns the data + the first `CUT` blocks) and a
 server (owns the rest).  Only the cut-layer activation and its gradient
-ever cross the boundary — inspect `wire_report` to see exactly what
-moved.
+ever cross the boundary — `wire_report` shows exactly what moved, and a
+`quantize_int8` middleware squeezes it 4x without stopping learning.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro import optim
+from repro.api import Plan, lm_split_fns, quantize_int8
 from repro.configs import get_config
 from repro.data import synthetic as syn
 from repro.models import build_model
@@ -22,44 +22,25 @@ cfg = get_config("phi4_mini_3_8b").reduced(vocab=128)
 model = build_model(cfg)
 key = jax.random.PRNGKey(0)
 
-params = model.init(key)
-client_params, server_params = model.split_params(params, CUT)
-opt = optim.adamw(5e-3)
-opt_c, opt_s = opt.init(client_params), opt.init(server_params)
-
-
-def split_loss(pc, ps, batch):
-    act = model.apply_client(pc, batch, CUT)          # client side
-    logits = model.apply_server(ps, act, CUT)         # server side
-    lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-    return -jnp.take_along_axis(lp, batch["labels"][..., None], -1).mean()
-
-
-@jax.jit
-def step(pc, ps, sc, ss, batch):
-    loss, (gc, gs) = jax.value_and_grad(split_loss, argnums=(0, 1))(
-        pc, ps, batch)
-    uc, sc = opt.update(gc, sc, pc)
-    us, ss = opt.update(gs, ss, ps)
-    return optim.apply_updates(pc, uc), optim.apply_updates(ps, us), \
-        sc, ss, loss
-
+plan = Plan(
+    mode="vanilla",                      # the paper's §3 configuration
+    model=lm_split_fns(model, CUT),      # client [0, CUT) | server rest
+    cut=CUT,
+    n_clients=1,
+    optimizer=optim.adamw(5e-3),
+    wire=[quantize_int8()],              # int8 middleware at the cut
+)
+sess = plan.compile()
+sess.init(key)
 
 gen = syn.lm_stream(key, batch=8, seq=32, vocab=cfg.vocab)
-first = last = None
-for i in range(STEPS):
-    client_params, server_params, opt_c, opt_s, loss = step(
-        client_params, server_params, opt_c, opt_s, next(gen))
-    if i == 0:
-        first = float(loss)
-    last = float(loss)
-    if i % 10 == 0:
-        print(f"step {i:3d}  split-loss {float(loss):.4f}")
+losses = sess.fit(([next(gen)] for _ in range(STEPS)), log_every=10)
 
-act = model.apply_client(client_params, next(gen), CUT)
-print("\nwire_report: the ONLY tensor the server ever sees:")
-print(f"  cut activation: shape={tuple(act.shape)} dtype={act.dtype}")
-print(f"loss {first:.3f} -> {last:.3f}  (client owns embed + {CUT} block, "
-      f"server owns {model.flat_layers() - CUT} blocks + head)")
-assert last < first, "did not learn!"
+print("\nwire_report: the ONLY tensors the server ever sees:")
+for w in sess.wire_report([next(gen)]):
+    print(f"  {w['name']:9s} {w['direction']:4s} shape={w['shape']} "
+          f"{w['bytes']} bytes on the wire (int8-quantized)")
+print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}  (client owns embed + "
+      f"{CUT} block, server owns {model.flat_layers() - CUT} blocks + head)")
+assert losses[-1] < losses[0], "did not learn!"
 print("OK")

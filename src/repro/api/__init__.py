@@ -1,0 +1,30 @@
+"""The public training API: declarative `Plan` -> compiled `Session`.
+
+Everything the repo can train — the paper's six split topologies AND the
+two baselines it compares against — compiles through this single entry
+point, with composable `WireTransform` middleware at the cut:
+
+    from repro.api import Plan, quantize_int8, dp_noise
+
+    sess = Plan(mode="u_shaped", model=seg_model, cuts=(1, 4),
+                n_clients=4, wire=[quantize_int8(), dp_noise(0.05)],
+                optimizer=optim.adamw(1e-2)).compile()
+    losses = sess.fit(data, rounds=20)
+    print(sess.meter(), sess.wire_report(batch))
+
+The older `core.protocol` / `core.baselines` trainer classes are thin
+deprecation shims over this API.
+"""
+from repro.api.baseline import FedAvgEngine, LargeBatchEngine
+from repro.api.plan import (BASELINE_MODES, BRANCH_MODES, MODES, FullFns,
+                            Plan, SPLIT_MODES, SplitFns, lm_split_fns,
+                            softmax_xent)
+from repro.api.session import Session
+from repro.api.wire import (WireStack, WireTransform, dp_noise,
+                            leakage_probe, quantize_int8, with_wire)
+
+__all__ = ["Plan", "Session", "SplitFns", "FullFns", "lm_split_fns",
+           "softmax_xent", "MODES", "SPLIT_MODES", "BASELINE_MODES",
+           "BRANCH_MODES", "WireTransform", "WireStack", "quantize_int8",
+           "dp_noise", "leakage_probe", "with_wire", "FedAvgEngine",
+           "LargeBatchEngine"]

@@ -1,0 +1,152 @@
+"""Compiled baseline engines: the two methods the paper compares
+SplitNN against, lowered onto the same stacked-pytree + `vmap` round
+shape as `repro.engine.RoundEngine`.
+
+  FedAvgEngine     — federated averaging (McMahan et al. 2017): every
+      client runs `local_steps` full-model steps (`lax.scan`) on its
+      shard, all clients at once under `vmap`, then the server averages
+      the local models.  One jitted program per round.
+  LargeBatchEngine — synchronous large-batch SGD (Chen et al. 2016):
+      `vmap` per-client full-model gradients, all-reduce (mean), one
+      server update.  With n_clients=1 this is plain monolithic training,
+      which is how `launch/train.py --mode monolithic` now runs.
+
+Both keep the eager trainers' Meter semantics exactly (model pull/push
+per round for fedavg; grad push + model pull per step for large-batch),
+accumulated analytically outside jit like `RoundEngine` does.  The eager
+`core.baselines` trainers delegate here (backend="engine") and remain
+the reference loops (backend="eager").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accounting import Meter, bytes_of_tree, flops_of_fn
+from repro.engine.engine import stack_trees
+from repro.optim import apply_updates
+
+
+@dataclasses.dataclass
+class FedAvgEngine:
+    """One compiled fedavg round: vmap(clients) x scan(local_steps)."""
+    init_fn: Callable            # key -> params
+    apply_fn: Callable           # (params, batch) -> logits
+    loss_fn: Callable            # (logits, labels) -> scalar
+    optimizer: "Optimizer"
+    n_clients: int
+    local_steps: int = 1
+
+    def __post_init__(self):
+        self.meter = Meter(self.n_clients)
+        self._flops_per_batch = None
+        self._param_bytes = None
+        self._round_jit = jax.jit(self._round)
+
+    def init(self, key):
+        params = self.init_fn(key)
+        return {"global": params,
+                "opt": stack_trees([self.optimizer.init(params)
+                                    for _ in range(self.n_clients)])}
+
+    def _local_loss(self, params, batch):
+        return self.loss_fn(self.apply_fn(params, batch), batch["labels"])
+
+    def _round(self, state, batches):
+        def local(opt, batch):
+            def step(carry, _):
+                p, o = carry
+                loss, g = jax.value_and_grad(self._local_loss)(p, batch)
+                ups, o = self.optimizer.update(g, o, p)
+                return (apply_updates(p, ups), o), loss
+            (p, opt), losses = jax.lax.scan(
+                step, (state["global"], opt), None, length=self.local_steps)
+            return p, opt, losses[-1]
+
+        locals_, opts, losses = jax.vmap(local)(state["opt"], batches)
+        new_global = jax.tree_util.tree_map(lambda a: a.mean(0), locals_)
+        return {"global": new_global, "opt": opts}, losses
+
+    def run_round(self, state, batches):
+        """batches: dict of (N, ...) stacked per-client arrays."""
+        self._probe(state, batches)
+        out = self._round_jit(state, batches)
+        for ci in range(self.n_clients):
+            self.meter.bytes_down[ci] += self._param_bytes      # model pull
+            self.meter.add_flops(ci,
+                                 self._flops_per_batch * self.local_steps)
+            self.meter.bytes_up[ci] += self._param_bytes        # model push
+        return out
+
+    def _probe(self, state, batches):
+        if self._flops_per_batch is None:
+            one = {k: v[0] for k, v in batches.items()}
+            self._flops_per_batch = 3.0 * flops_of_fn(
+                self.apply_fn, state["global"], one)
+        if self._param_bytes is None:
+            self._param_bytes = bytes_of_tree(state["global"])
+
+    def evaluate(self, state, batch):
+        logits = self.apply_fn(state["global"], batch)
+        return (jnp.argmax(logits, -1) == batch["labels"]).mean()
+
+
+@dataclasses.dataclass
+class LargeBatchEngine:
+    """One compiled sync-SGD step: vmap grads, mean, one update."""
+    init_fn: Callable
+    apply_fn: Callable           # (params, batch) -> logits
+    loss_fn: Callable
+    optimizer: "Optimizer"
+    n_clients: int
+
+    def __post_init__(self):
+        self.meter = Meter(self.n_clients)
+        self._flops_per_batch = None
+        self._param_bytes = None
+        self._step_jit = jax.jit(self._step)
+
+    def init(self, key):
+        params = self.init_fn(key)
+        return {"global": params, "opt": self.optimizer.init(params)}
+
+    def _loss(self, params, batch):
+        return self.loss_fn(self.apply_fn(params, batch), batch["labels"])
+
+    def _step(self, state, batches):
+        losses, grads = jax.vmap(
+            lambda b: jax.value_and_grad(self._loss)(state["global"], b)
+        )(batches)
+        g_mean = jax.tree_util.tree_map(lambda a: a.mean(0), grads)
+        ups, opt = self.optimizer.update(g_mean, state["opt"],
+                                         state["global"])
+        return {"global": apply_updates(state["global"], ups),
+                "opt": opt}, losses
+
+    def run_round(self, state, batches):
+        self._probe(state, batches)
+        out = self._step_jit(state, batches)
+        grad_bytes = self._param_bytes      # grads mirror the param tree
+        for ci in range(self.n_clients):
+            self.meter.add_flops(ci, self._flops_per_batch)
+            self.meter.bytes_up[ci] += grad_bytes       # grad push
+            self.meter.bytes_down[ci] += self._param_bytes  # model pull
+        return out
+
+    def _probe(self, state, batches):
+        if self._flops_per_batch is None:
+            one = {k: v[0] for k, v in batches.items()}
+            self._flops_per_batch = 3.0 * flops_of_fn(
+                self.apply_fn, state["global"], one)
+        if self._param_bytes is None:
+            self._param_bytes = bytes_of_tree(state["global"])
+
+    def evaluate(self, state, batch):
+        logits = self.apply_fn(state["global"], batch)
+        return (jnp.argmax(logits, -1) == batch["labels"]).mean()
+
+
+__all__ = ["FedAvgEngine", "LargeBatchEngine"]

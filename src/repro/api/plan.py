@@ -1,0 +1,220 @@
+"""`Plan` — one declarative description of ANYTHING this repo can train.
+
+A `Plan` names the collaboration mode (all six split topologies of the
+paper plus the two baselines it compares against), where the cut falls,
+who the parties are (`n_clients`), how turns are scheduled, and an
+ordered stack of `WireTransform` middleware applied at the cut.
+`Plan.compile()` lowers it onto one compiled engine — the jitted
+scan/vmap `RoundEngine` for split modes, the vmap `FedAvgEngine` /
+`LargeBatchEngine` for the baselines — wrapped in a `Session` with a
+uniform `fit/evaluate/meter` surface:
+
+    plan = Plan(mode="vanilla", model=seg_model, cut=2, n_clients=8,
+                wire=[quantize_int8(), dp_noise(0.05)])
+    sess = plan.compile()
+    sess.fit(data, rounds=20)
+    print(sess.meter())
+
+Modes and their required fields:
+
+  vanilla           model (SegModel or SplitFns), cut
+  u_shaped          model (SegModel), cuts=(c1, c2)
+  vertical          branch, trunk=(init, apply)
+  multihop          model (SegModel), cuts=[c0, c1, ...]
+  multitask         branch, heads=((init, apply), ...)
+  extended_vanilla  branch, mid=(init, apply), trunk=(init, apply)
+  fedavg            model (SegModel, SplitFns or FullFns), local_steps
+  large_batch       model (SegModel, SplitFns or FullFns)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.api import session as _session
+from repro.api.baseline import FedAvgEngine, LargeBatchEngine
+from repro.api.wire import WireStack, WireTransform, with_wire
+from repro.core import split as sp
+from repro.engine import RoundEngine
+from repro.engine import topology as topo
+
+MODES = ("vanilla", "u_shaped", "vertical", "multihop", "multitask",
+         "extended_vanilla", "fedavg", "large_batch")
+SPLIT_MODES = MODES[:6]
+BASELINE_MODES = MODES[6:]
+BRANCH_MODES = ("vertical", "multitask", "extended_vanilla")
+
+
+def softmax_xent(logits, labels):
+    """Default loss: softmax cross-entropy over the last axis.  Works for
+    (B, C) classifier logits and (B, S, V) LM logits alike."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    return -jnp.take_along_axis(lp, labels[..., None], -1).mean()
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitFns:
+    """Vanilla-split hooks over an opaque model (the `models.lm.LM`
+    family): init the full tree, split it at the cut, run each side."""
+    init: Callable            # key -> full params
+    split: Callable           # full params -> (client, server)
+    client_apply: Callable    # (pc, batch) -> cut activation
+    server_apply: Callable    # (ps, act) -> logits
+    full_apply: Callable | None = None   # (params, batch) -> logits
+
+
+def lm_split_fns(model, cut: int) -> SplitFns:
+    """`SplitFns` for any model exposing the LM split hooks."""
+    return SplitFns(
+        init=model.init,
+        split=lambda p: model.split_params(p, cut),
+        client_apply=lambda pc, b: model.apply_client(pc, b, cut),
+        server_apply=lambda ps, a: model.apply_server(ps, a, cut),
+        full_apply=lambda p, b: model.forward(p, b))
+
+
+@dataclasses.dataclass(frozen=True)
+class FullFns:
+    """Whole-model hooks for the baseline modes (no cut)."""
+    init: Callable            # key -> params
+    apply: Callable           # (params, batch) -> logits
+
+
+def _full_fns(model) -> FullFns:
+    """Normalise any accepted model form to baseline (init, apply)."""
+    if isinstance(model, FullFns):
+        return model
+    if isinstance(model, sp.SegModel):
+        return FullFns(
+            init=model.init,
+            apply=lambda p, b: model.apply_range(p, b["x"], 0,
+                                                 model.n_segments))
+    if isinstance(model, SplitFns):
+        if model.full_apply is None:
+            raise ValueError("SplitFns.full_apply is required for the "
+                             "baseline modes")
+        return FullFns(init=model.init, apply=model.full_apply)
+    raise TypeError(f"cannot run a baseline over {type(model).__name__}")
+
+
+def _clipped(opt, max_norm: float):
+    def update(grads, state, params=None):
+        grads, _ = optim.clip_by_global_norm(grads, max_norm)
+        return opt.update(grads, state, params)
+    return optim.optimizers.Optimizer(opt.init, update)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    mode: str
+    model: Any = None                     # SegModel | SplitFns | FullFns
+    cut: int | None = None                # vanilla
+    cuts: Sequence[int] | None = None     # u_shaped / multihop
+    branch: sp.Branch | None = None       # branch modes
+    trunk: tuple | None = None            # (init, apply)
+    mid: tuple | None = None              # (init, apply) extended_vanilla
+    heads: Sequence[tuple] | None = None  # ((init, apply), ...) multitask
+    n_clients: int = 1
+    schedule: str | None = None           # None -> mode default
+    sync: str = "p2p"
+    loss_fn: Callable = softmax_xent
+    optimizer: "Optimizer | None" = None  # None -> adamw(1e-3)
+    optimizer_server: "Optimizer | None" = None
+    wire: Sequence[WireTransform] = ()
+    local_steps: int = 1                  # fedavg
+    clip_norm: float | None = None
+
+    # ---- validation helpers -----------------------------------------------
+
+    def _require(self, cond, msg):
+        if not cond:
+            raise ValueError(f"Plan(mode={self.mode!r}): {msg}")
+
+    def _optimizers(self):
+        opt_c = self.optimizer or optim.adamw(1e-3)
+        opt_s = self.optimizer_server or opt_c
+        if self.clip_norm is not None:
+            opt_c, opt_s = _clipped(opt_c, self.clip_norm), \
+                _clipped(opt_s, self.clip_norm)
+        return opt_c, opt_s
+
+    @property
+    def effective_schedule(self) -> str:
+        if self.mode in BRANCH_MODES:
+            return "parallel"
+        return self.schedule or "round_robin"
+
+    # ---- lowering ----------------------------------------------------------
+
+    def _topology(self) -> "topo.Topology":
+        m = self.mode
+        if m == "vanilla":
+            self._require(self.cut is not None, "needs cut=")
+            if isinstance(self.model, SplitFns):
+                return topo.vanilla_fns(self.model.init, self.model.split,
+                                        self.model.client_apply,
+                                        self.model.server_apply)
+            self._require(isinstance(self.model, sp.SegModel),
+                          "needs model= (SegModel or SplitFns)")
+            return topo.vanilla(self.model, self.cut)
+        if m == "u_shaped":
+            self._require(isinstance(self.model, sp.SegModel),
+                          "needs model= (SegModel)")
+            self._require(self.cuts is not None and len(self.cuts) == 2,
+                          "needs cuts=(c1, c2)")
+            return topo.u_shaped(self.model, *self.cuts)
+        if m == "multihop":
+            self._require(isinstance(self.model, sp.SegModel),
+                          "needs model= (SegModel)")
+            self._require(bool(self.cuts), "needs cuts=[c0, ...]")
+            return topo.multihop(self.model, list(self.cuts))
+        self._require(self.branch is not None, "needs branch=")
+        if m == "vertical":
+            self._require(self.trunk is not None,
+                          "needs trunk=(init, apply)")
+            return topo.vertical(self.branch, self.n_clients, *self.trunk)
+        if m == "multitask":
+            self._require(bool(self.heads),
+                          "needs heads=((init, apply), ...)")
+            return topo.multitask(self.branch, self.n_clients,
+                                  [h[0] for h in self.heads],
+                                  [h[1] for h in self.heads])
+        # extended_vanilla
+        self._require(self.mid is not None and self.trunk is not None,
+                      "needs mid=(init, apply) and trunk=(init, apply)")
+        return topo.extended_vanilla(self.branch, self.n_clients,
+                                     *self.mid, *self.trunk)
+
+    def compile(self) -> "_session.Session":
+        """Lower this plan onto ONE compiled engine and wrap it in a
+        `Session`."""
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, "
+                             f"got {self.mode!r}")
+        stack = WireStack(self.wire)
+        opt_c, opt_s = self._optimizers()
+        if self.mode in BASELINE_MODES:
+            if stack:
+                raise ValueError(f"Plan(mode={self.mode!r}): baselines "
+                                 "have no cut wire to transform")
+            fns = _full_fns(self.model)
+            if self.mode == "fedavg":
+                eng = FedAvgEngine(init_fn=fns.init, apply_fn=fns.apply,
+                                   loss_fn=self.loss_fn, optimizer=opt_c,
+                                   n_clients=self.n_clients,
+                                   local_steps=self.local_steps)
+            else:
+                eng = LargeBatchEngine(init_fn=fns.init, apply_fn=fns.apply,
+                                       loss_fn=self.loss_fn, optimizer=opt_c,
+                                       n_clients=self.n_clients)
+            return _session.Session(self, eng, stack)
+        topology = with_wire(self._topology(), stack)
+        eng = RoundEngine(topology=topology, loss_fn=self.loss_fn,
+                          optimizer_client=opt_c, optimizer_server=opt_s,
+                          n_clients=self.n_clients,
+                          schedule=self.effective_schedule, sync=self.sync)
+        return _session.Session(self, eng, stack)

@@ -1,0 +1,155 @@
+"""`Session` — a compiled `Plan`, ready to train.
+
+One surface for all eight modes: `fit` drives rounds (a round is one
+turn per client — for `large_batch` one synchronous step), `evaluate`
+scores a batch, `meter` reports per-client FLOPs and wire bytes,
+`wire_report` lists exactly what crosses the boundary per turn (priced
+through the plan's `WireTransform` stack), and `leakage_report`
+quantifies how much of the raw input survives onto the wire
+(distance correlation, Székely et al.) — including the effect of the
+wire middleware.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import privacy
+from repro.engine import RoundEngine, stack_batches, tree_index
+from repro.engine.topology import BRANCH_KINDS
+
+
+class Session:
+    """Stateful handle over one compiled engine.  `self.state` is the
+    engine's pytree state (checkpoint it directly with
+    `repro.checkpoint`)."""
+
+    def __init__(self, plan, engine, wire_stack):
+        self.plan = plan
+        self.engine = engine
+        self.wire_stack = wire_stack
+        self.state = None
+
+    # ---- lifecycle ---------------------------------------------------------
+
+    @property
+    def is_split(self) -> bool:
+        return isinstance(self.engine, RoundEngine)
+
+    def init(self, key=None, *, seed: int = 0):
+        if key is None:
+            key = jax.random.PRNGKey(seed)
+        if self.is_split:
+            identical = self.engine.topology.kind not in BRANCH_KINDS
+            self.state = self.engine.init(key,
+                                          identical_clients=identical)
+        else:
+            self.state = self.engine.init(key)
+        return self.state
+
+    # ---- training ----------------------------------------------------------
+
+    def _prep(self, batches):
+        """list of per-client dicts -> stacked; dict passes through (it is
+        already stacked — or the (K, B, ...) layout of the branch modes)."""
+        if isinstance(batches, (list, tuple)):
+            return stack_batches(list(batches))
+        return batches
+
+    def run_round(self, batches):
+        """One compiled round.  Returns the per-turn losses array."""
+        if self.state is None:
+            self.init()
+        self.state, losses = self.engine.run_round(self.state,
+                                                   self._prep(batches))
+        return losses
+
+    def fit(self, data, *, rounds: int | None = None, key=None,
+            log_every: int = 0) -> list[float]:
+        """Train.  `data` is either an iterable yielding one round's
+        batches each (list of per-client dicts, or an already-stacked
+        dict), or a callable `round_idx -> batches` (then `rounds` is
+        required).  Returns the per-round mean losses."""
+        if callable(data):
+            if rounds is None:
+                raise ValueError("fit(data=<callable>) needs rounds=")
+            it: Iterable = (data(r) for r in range(rounds))
+        else:
+            it = data if rounds is None else _take(data, rounds)
+        if self.state is None:
+            self.init(key)
+        losses = []
+        for r, batches in enumerate(it):
+            ls = self.run_round(batches)
+            losses.append(float(jnp.mean(ls)))
+            if log_every and (r % log_every == 0):
+                print(f"round {r:5d}  loss {losses[-1]:.4f}", flush=True)
+        return losses
+
+    # ---- inspection --------------------------------------------------------
+
+    def evaluate(self, batch, *, client: int = 0):
+        """Accuracy on one (unstacked) eval batch."""
+        if self.is_split:
+            return self.engine.evaluate(self.state, batch, client=client)
+        return self.engine.evaluate(self.state, batch)
+
+    def meter(self) -> dict:
+        """Cumulative per-client resource totals (TFLOPs / GB)."""
+        return self.engine.meter.totals()
+
+    def wire_report(self, batches) -> list[dict]:
+        """Everything that crosses the boundary in ONE turn for this batch
+        shape, priced through the wire middleware stack.  Baselines report
+        their model pull/push instead (they have no cut)."""
+        if self.state is None:
+            self.init()
+        if not self.is_split:
+            pb = self.engine._param_bytes
+            if pb is None:
+                self.engine._probe(self.state, self._prep(batches))
+                pb = self.engine._param_bytes
+            return [{"name": "model_pull", "direction": "down", "bytes": pb},
+                    {"name": "model_push", "direction": "up", "bytes": pb}]
+        cost = self.engine.turn_cost(self.state, self._prep(batches))
+        return [{"name": w.name, "direction": w.direction,
+                 "shape": tuple(w.shape), "dtype": str(w.dtype),
+                 "bytes": w.bytes} for w in cost.wires]
+
+    def leakage_report(self, batch, *, client: int = 0) -> dict:
+        """Distance correlation between the raw client input and what
+        actually crosses the wire (after the transform stack) — the
+        number the paper's privacy argument rests on.  `batch` is one
+        unstacked batch (branch modes: the (K, B, ...) layout; `client`
+        selects the modality)."""
+        if not self.is_split:
+            raise ValueError("baseline modes ship the whole model, not a "
+                             "cut activation — leakage_report does not "
+                             "apply")
+        topology = self.engine.topology
+        if topology.client_fwd is None:
+            raise ValueError(f"{topology.kind} topology exposes no "
+                             "client forward to probe")
+        if self.state is None:
+            self.init()
+        if topology.kind in BRANCH_KINDS:
+            pc = tree_index(self.state["clients"], client)
+            x_raw = batch["x"][client]
+            probe_batch = {**batch, "x": batch["x"][client:client + 1]}
+        else:
+            pc = tree_index(self.state["clients"], client)
+            x_raw = batch.get("x", next(iter(batch.values())))
+            probe_batch = batch
+        act = topology.client_fwd(pc, probe_batch)
+        wire_val = self.wire_stack.pre_probe(act) if self.wire_stack else act
+        return privacy.leakage_report(x_raw, wire_val,
+                                      batch.get("labels"))
+
+
+def _take(data, n: int):
+    for r, item in enumerate(data):
+        if r >= n:
+            return
+        yield item

@@ -1,0 +1,187 @@
+"""Composable wire middleware — transforms applied AT THE CUT.
+
+A `WireTransform` is a named pair of functions:
+
+  apply(t, name, direction) -> t'   — applied in-graph to every value the
+      moment it crosses the client/server boundary (forward activations
+      AND backward cut-gradients), inside jit/scan/vmap;
+  bytes_fn(shape, dtype, nbytes) -> nbytes'  — what the transform does to
+      the PHYSICAL wire-byte count of one payload (e.g. int8 quantization
+      ships 1 byte/element + fp32 row scales even though the in-graph
+      value stays fp32).
+
+Transforms compose left-to-right: `wire=[quantize_int8(), dp_noise(0.1)]`
+quantizes first, then adds noise; the metered bytes fold through the
+stack's `bytes_fn`s in the same order.  The hook point is
+`core.split.record` — every topology's grad function routes its boundary
+values through it, so middleware works for all eight `Plan` modes that
+have a wire without any per-topology code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.privacy import distance_correlation
+from repro.core.wire_compress import _fake_quant_int8, wire_bytes
+from repro.engine.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class WireTransform:
+    """One middleware layer on the cut wire."""
+    name: str
+    apply: Callable          # (t, name, direction) -> t
+    bytes_fn: Callable       # (shape, dtype, nbytes) -> nbytes
+    probe: bool = False      # True: offline-probe-only (identity on wire)
+
+
+def _identity_bytes(shape, dtype, nbytes):
+    return nbytes
+
+
+# ---------------------------------------------------------------------------
+# the three stock transforms
+# ---------------------------------------------------------------------------
+
+def quantize_int8() -> WireTransform:
+    """Per-row symmetric int8 fake-quant of everything that crosses (see
+    `core.wire_compress`): the receiving side sees int8 information
+    content; the physical payload is 1 byte/element + one fp32 scale per
+    last-axis row — exactly `wire_compress.wire_bytes(quantized=True)`."""
+    return WireTransform(
+        name="quantize_int8",
+        apply=lambda t, name, direction: _fake_quant_int8(t),
+        bytes_fn=lambda shape, dtype, nbytes: wire_bytes(
+            shape, quantized=True, base_dtype=dtype))
+
+
+def dp_noise(sigma: float, seed: int = 0) -> WireTransform:
+    """Gaussian noise on every crossing value (DP-style masking of the
+    wire; sigma is in units of the payload's own scale).  jit-safe and
+    deterministic: the key is derived from `seed`, the wire's static
+    name, and the payload content, so each turn/payload draws different
+    noise without threading a PRNG key through the engine."""
+    base = jax.random.PRNGKey(seed)
+
+    def apply(t, name, direction):
+        k = jax.random.fold_in(base, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+        # wrapping integer sum of the raw bits: a cheap content hash that
+        # cannot saturate (a float->int32 cast would clamp at INT32_MAX
+        # for large payloads and reuse the same noise every turn)
+        bits = jax.lax.bitcast_convert_type(t.astype(jnp.float32),
+                                            jnp.uint32)
+        k = jax.random.fold_in(k, bits.sum(dtype=jnp.uint32))
+        return t + sigma * jax.random.normal(k, t.shape, t.dtype)
+
+    return WireTransform(name="dp_noise", apply=apply,
+                         bytes_fn=_identity_bytes)
+
+
+def leakage_probe() -> WireTransform:
+    """Identity on the wire; marks the stack so `Session.leakage_report`
+    computes the distance-correlation (Székely) between raw client inputs
+    and what actually crosses AFTER the upstream transforms.  Kept out of
+    the training graph: the O(B^2) dcor matrices belong in an offline
+    probe, not inside the compiled round."""
+    return WireTransform(name="leakage_probe",
+                         apply=lambda t, name, direction: t,
+                         bytes_fn=_identity_bytes, probe=True)
+
+
+# ---------------------------------------------------------------------------
+# stack + tape
+# ---------------------------------------------------------------------------
+
+class WireStack:
+    """An ordered stack of `WireTransform`s, applied at every crossing."""
+
+    def __init__(self, transforms: Sequence[WireTransform]):
+        self.transforms = tuple(transforms)
+
+    def __bool__(self):
+        return bool(self.transforms)
+
+    def apply(self, t, name: str, direction: str):
+        for tr in self.transforms:
+            t = tr.apply(t, name, direction)
+        return t
+
+    def wire_bytes(self, shape, dtype) -> int:
+        """Physical bytes of one payload after the whole stack."""
+        n = 1
+        for s in shape:
+            n *= s
+        nbytes = n * jnp.dtype(dtype).itemsize
+        for tr in self.transforms:
+            nbytes = tr.bytes_fn(tuple(shape), dtype, nbytes)
+        return int(nbytes)
+
+    @property
+    def wants_leakage_probe(self) -> bool:
+        return any(tr.probe for tr in self.transforms)
+
+    def pre_probe(self, t, name: str = "probe", direction: str = "up"):
+        """Apply only the non-probe transforms (what the wire carries
+        when the offline leakage probe inspects it)."""
+        for tr in self.transforms:
+            if not tr.probe:
+                t = tr.apply(t, name, direction)
+        return t
+
+    def leakage(self, x_raw, wire_value) -> float:
+        return float(distance_correlation(x_raw, wire_value))
+
+
+class WireTape(list):
+    """A `WireRecord` list that `core.split.record` recognises: values
+    are transformed in-graph and records are priced at the stack's
+    physical wire bytes."""
+
+    def __init__(self, stack: WireStack):
+        super().__init__()
+        self.stack = stack
+
+    def transform(self, t, name: str, direction: str):
+        return self.stack.apply(t, name, direction)
+
+    def payload_bytes(self, shape, dtype) -> int:
+        return self.stack.wire_bytes(shape, dtype)
+
+
+def with_wire(topology: Topology, stack: WireStack) -> Topology:
+    """Wrap a topology so every grad path runs its boundary values
+    through `stack` — both the jitted `turn_grads` (fresh tape per call;
+    records discarded, values transformed) and the metering
+    `turn_grads_wires` (caller's list receives stack-priced records)."""
+    if not stack:
+        return topology
+
+    def wrap_wires(fn):
+        if fn is None:
+            return None
+
+        def wired(*args):
+            *head, wires = args
+            tape = WireTape(stack)
+            out = fn(*head, tape)
+            wires.extend(tape)
+            return out
+        return wired
+
+    def drop_wires(fn):
+        if fn is None:
+            return None
+        return lambda *args: fn(*args, WireTape(stack))
+
+    return dataclasses.replace(
+        topology,
+        turn_grads=(None if topology.turn_grads is None
+                    else drop_wires(topology.turn_grads_wires)),
+        turn_grads_wires=wrap_wires(topology.turn_grads_wires),
+        round_grads=(None if topology.round_grads is None
+                     else drop_wires(topology.turn_grads_wires)))

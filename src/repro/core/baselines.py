@@ -1,8 +1,16 @@
 """Baselines the paper compares against: federated averaging (McMahan et
-al. 2017) and large-batch synchronous SGD (Chen et al. 2016)."""
+al. 2017) and large-batch synchronous SGD (Chen et al. 2016).
+
+DEPRECATED: these trainers are thin shims over `repro.api.Plan`
+(mode="fedavg" / mode="large_batch") — `train_round`/`train_step`
+delegate to the compiled `FedAvgEngine`/`LargeBatchEngine` built through
+the Plan API, so shim and Plan stay bit-identical.  `backend="eager"`
+keeps the original per-client Python loops as the verified reference.
+"""
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import jax
@@ -12,9 +20,31 @@ from repro.core.accounting import Meter, bytes_of_tree, flops_of_fn
 from repro.optim import apply_updates
 
 
+def _api():
+    from repro import api
+    return api
+
+
+def _engine_mod():
+    from repro import engine
+    return engine
+
+
+def _warn_deprecated(name: str, mode: str):
+    warnings.warn(
+        f"{name} is deprecated; use repro.api.Plan(mode={mode!r}, ...) "
+        "instead (same compiled engine, one declarative surface)",
+        DeprecationWarning, stacklevel=3)
+
+
 def tree_mean(trees: list):
     return jax.tree_util.tree_map(
         lambda *xs: sum(xs[1:], xs[0]) / len(xs), *trees)
+
+
+def _ragged(client_batches: list[dict]) -> bool:
+    from repro.core.protocol import _ragged as ragged
+    return ragged(client_batches)
 
 
 @dataclasses.dataclass
@@ -27,10 +57,29 @@ class FedAvgTrainer:
     optimizer: "Optimizer"
     n_clients: int
     local_steps: int = 1
+    backend: str = "engine"      # "engine" | "eager"
 
     def __post_init__(self):
+        _warn_deprecated("FedAvgTrainer", "fedavg")
         self.meter = Meter(self.n_clients)
         self._flops_per_batch = None
+        self._engine = None
+
+    @property
+    def engine(self) -> "FedAvgEngine":
+        if self._engine is None:
+            api = _api()
+            sess = api.Plan(
+                mode="fedavg",
+                model=api.FullFns(
+                    init=self.init_fn,
+                    apply=lambda p, b: self.apply_fn(p, b["x"])),
+                loss_fn=self.loss_fn, optimizer=self.optimizer,
+                n_clients=self.n_clients,
+                local_steps=self.local_steps).compile()
+            self._engine = sess.engine
+            self._engine.meter = self.meter     # one shared meter
+        return self._engine
 
     def init(self, key):
         params = self.init_fn(key)
@@ -43,6 +92,18 @@ class FedAvgTrainer:
                             batch["labels"])
 
     def train_round(self, state, client_batches: list[dict]):
+        if self.backend == "eager" or _ragged(client_batches):
+            return self._train_round_eager(state, client_batches)
+        eng = _engine_mod()
+        est = {"global": state["global"],
+               "opt": eng.stack_trees(state["opt"])}
+        est, losses = self.engine.run_round(
+            est, eng.stack_batches(client_batches))
+        return {"global": est["global"],
+                "opt": eng.unstack_tree(est["opt"], self.n_clients)}, \
+            losses.mean()
+
+    def _train_round_eager(self, state, client_batches: list[dict]):
         locals_, losses = [], []
         for ci, batch in enumerate(client_batches):
             p = state["global"]
@@ -81,16 +142,42 @@ class LargeBatchSGDTrainer:
     loss_fn: Callable
     optimizer: "Optimizer"
     n_clients: int
+    backend: str = "engine"      # "engine" | "eager"
 
     def __post_init__(self):
+        _warn_deprecated("LargeBatchSGDTrainer", "large_batch")
         self.meter = Meter(self.n_clients)
         self._flops_per_batch = None
+        self._engine = None
+
+    @property
+    def engine(self) -> "LargeBatchEngine":
+        if self._engine is None:
+            api = _api()
+            sess = api.Plan(
+                mode="large_batch",
+                model=api.FullFns(
+                    init=self.init_fn,
+                    apply=lambda p, b: self.apply_fn(p, b["x"])),
+                loss_fn=self.loss_fn, optimizer=self.optimizer,
+                n_clients=self.n_clients).compile()
+            self._engine = sess.engine
+            self._engine.meter = self.meter
+        return self._engine
 
     def init(self, key):
         params = self.init_fn(key)
         return {"global": params, "opt": self.optimizer.init(params)}
 
     def train_step(self, state, client_batches: list[dict]):
+        if self.backend == "eager" or _ragged(client_batches):
+            return self._train_step_eager(state, client_batches)
+        eng = _engine_mod()
+        state, losses = self.engine.run_round(
+            state, eng.stack_batches(client_batches))
+        return state, losses.mean()
+
+    def _train_step_eager(self, state, client_batches: list[dict]):
         grads, losses = [], []
         p = state["global"]
         for ci, batch in enumerate(client_batches):

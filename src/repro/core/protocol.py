@@ -8,16 +8,18 @@ segment updates every step.  Meters accumulate per-client FLOPs and
 wire bytes so the Fig.3 / Tables 1-2 comparisons come from the same
 run loop.
 
-These trainers are now thin API-compatible wrappers: `train_round`
-delegates to the compiled `repro.engine.RoundEngine` (one jitted
-`lax.scan` per round) by default.  `backend="eager"` keeps the original
-per-turn Python loop — it is the reference the engine is verified
-against (tests/test_engine.py) and the baseline in
-benchmarks/engine_bench.py.
+DEPRECATED: these trainers are thin shims over the declarative
+`repro.api.Plan` — their compiled engines come from
+`Plan(mode=..., ...).compile()`, so they stay bit-identical to the new
+API.  New code should build a `Plan` directly (see README).
+`backend="eager"` keeps the original per-turn Python loop — it is the
+reference the engine is verified against (tests/test_engine.py) and the
+baseline in benchmarks/engine_bench.py.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import jax
@@ -35,6 +37,18 @@ def _engine():
     return engine
 
 
+def _api():
+    from repro import api
+    return api
+
+
+def _warn_deprecated(name: str):
+    warnings.warn(
+        f"{name} is deprecated; build a repro.api.Plan instead "
+        "(same engine, one declarative surface for every mode)",
+        DeprecationWarning, stacklevel=3)
+
+
 @dataclasses.dataclass
 class SplitTrainer:
     model: sp.SegModel
@@ -48,21 +62,23 @@ class SplitTrainer:
     schedule: str = "round_robin"           # engine backend only
 
     def __post_init__(self):
+        _warn_deprecated("SplitTrainer")
         self.meter = Meter(self.n_clients)
         self._client_flops_per_batch = None
         self._engine = None
 
     @property
     def engine(self) -> "RoundEngine":
+        """The compiled engine, built through the Plan API so the shim
+        stays bit-identical to `Plan(mode="vanilla", ...).compile()`."""
         if self._engine is None:
-            eng = _engine()
-            self._engine = eng.RoundEngine(
-                topology=eng.topology.vanilla(self.model, self.cut),
-                loss_fn=self.loss_fn,
-                optimizer_client=self.optimizer_client,
+            sess = _api().Plan(
+                mode="vanilla", model=self.model, cut=self.cut,
+                loss_fn=self.loss_fn, optimizer=self.optimizer_client,
                 optimizer_server=self.optimizer_server,
                 n_clients=self.n_clients, schedule=self.schedule,
-                sync=self.sync)
+                sync=self.sync).compile()
+            self._engine = sess.engine
             self._engine.meter = self.meter     # one shared meter
         return self._engine
 
@@ -156,22 +172,13 @@ def _ragged(client_batches: list[dict]) -> bool:
 
 
 def _stack_state(state, n: int) -> dict:
-    """Protocol list-of-trees state -> stacked engine state."""
-    eng = _engine()
-    return {"clients": eng.stack_trees(state["clients"]),
-            "server": state["server"],
-            "opt_c": eng.stack_trees(state["opt_c"]),
-            "opt_s": state["opt_s"],
-            "last_trained": jnp.asarray(state["last_trained"], jnp.int32)}
+    """Protocol list-of-trees state -> stacked engine state (the single
+    implementation lives in repro.engine.engine)."""
+    return _engine().stack_state(state, n)
 
 
 def _unstack_state(est, n: int) -> dict:
-    eng = _engine()
-    return {"clients": eng.unstack_tree(est["clients"], n),
-            "server": est["server"],
-            "opt_c": eng.unstack_tree(est["opt_c"], n),
-            "opt_s": est["opt_s"],
-            "last_trained": int(est["last_trained"])}
+    return _engine().unstack_state(est, n)
 
 
 @dataclasses.dataclass
@@ -185,19 +192,19 @@ class UShapedTrainer:
     n_clients: int
 
     def __post_init__(self):
+        _warn_deprecated("UShapedTrainer")
         self.meter = Meter(self.n_clients)
         self._engine = None
 
     @property
     def engine(self) -> "RoundEngine":
         if self._engine is None:
-            eng = _engine()
-            self._engine = eng.RoundEngine(
-                topology=eng.topology.u_shaped(self.model, self.cut1,
-                                               self.cut2),
-                loss_fn=self.loss_fn, optimizer_client=self.optimizer,
-                optimizer_server=self.optimizer,
-                n_clients=self.n_clients, sync="none")
+            sess = _api().Plan(
+                mode="u_shaped", model=self.model,
+                cuts=(self.cut1, self.cut2), loss_fn=self.loss_fn,
+                optimizer=self.optimizer, n_clients=self.n_clients,
+                sync="none").compile()
+            self._engine = sess.engine
             self._engine.meter = self.meter
         return self._engine
 

@@ -51,14 +51,23 @@ def list_segmodel(n_segments, init, layer_apply) -> SegModel:
 
 @dataclasses.dataclass
 class WireRecord:
-    """One payload that crossed the client/server boundary."""
+    """One payload that crossed the client/server boundary.
+
+    `payload_bytes` overrides the dense shape*itemsize count when wire
+    middleware changed the physical representation (e.g. int8 quantization
+    ships 1 byte/element + per-row scales while the in-graph value stays
+    fp32) — `repro.api.wire` sets it from the transform stack.
+    """
     name: str
     shape: tuple
     dtype: Any
     direction: str       # "up" (client->server) | "down"
+    payload_bytes: int | None = None
 
     @property
     def bytes(self) -> int:
+        if self.payload_bytes is not None:
+            return self.payload_bytes
         n = 1
         for s in self.shape:
             n *= s
@@ -66,7 +75,22 @@ class WireRecord:
 
 
 def record(wires: list, name: str, t, direction: str):
-    wires.append(WireRecord(name, tuple(t.shape), t.dtype, direction))
+    """Record one boundary crossing and return the tensor AS THE OTHER
+    SIDE RECEIVES IT.
+
+    `wires` is either a plain list (no middleware — `t` passes through
+    unchanged, the original behaviour) or a `repro.api.wire.WireTape`,
+    which applies the plan's `WireTransform` stack to the value in-graph
+    and prices the record at the stack's physical wire bytes.  Every
+    grad function in this module uses the RETURN value, so middleware
+    composes with all topologies for free."""
+    transform = getattr(wires, "transform", None)
+    payload = None
+    if transform is not None:
+        t = transform(t, name, direction)
+        payload = wires.payload_bytes(tuple(t.shape), t.dtype)
+    wires.append(WireRecord(name, tuple(t.shape), t.dtype, direction,
+                            payload))
     return t
 
 
@@ -87,7 +111,7 @@ def vanilla_split_grads(model: SegModel, cut: int, params_c, params_s,
         return model.apply_range(pc, x, 0, cut)
 
     act, client_vjp = jax.vjp(client_fwd, params_c)
-    record(wires, "cut_act", act, "up")
+    act = record(wires, "cut_act", act, "up")
 
     def server_loss(ps, a):
         logits = model.apply_range(ps, a, cut, model.n_segments,
@@ -99,7 +123,7 @@ def vanilla_split_grads(model: SegModel, cut: int, params_c, params_s,
     (loss, ), vjp_s = jax.vjp(lambda ps, a: (server_loss(ps, a),),
                               params_s, act)
     g_server, g_act = vjp_s((jnp.ones(()),))
-    record(wires, "cut_grad", g_act, "down")
+    g_act = record(wires, "cut_grad", g_act, "down")
     (g_client,) = client_vjp(g_act)
     return loss, g_client, g_server, wires
 
@@ -121,11 +145,11 @@ def u_shaped_grads(model: SegModel, cut1: int, cut2: int, params_head,
 
     act1, vjp_head = jax.vjp(
         lambda p: model.apply_range(p, x, 0, cut1), params_head)
-    record(wires, "cut_act_1", act1, "up")
+    act1 = record(wires, "cut_act_1", act1, "up")
 
     act2, vjp_mid = jax.vjp(
         lambda p, a: _apply_mid(model, p, a, cut1, cut2), params_mid, act1)
-    record(wires, "cut_act_2", act2, "down")
+    act2 = record(wires, "cut_act_2", act2, "down")
 
     def tail_loss(p, a):
         logits = _apply_tail(model, p, a, cut2)
@@ -133,9 +157,9 @@ def u_shaped_grads(model: SegModel, cut1: int, cut2: int, params_head,
 
     loss_val, (g_tail, g_act2) = jax.value_and_grad(
         tail_loss, argnums=(0, 1))(params_tail, act2)
-    record(wires, "cut_grad_2", g_act2, "up")
+    g_act2 = record(wires, "cut_grad_2", g_act2, "up")
     g_mid, g_act1 = vjp_mid(g_act2)
-    record(wires, "cut_grad_1", g_act1, "down")
+    g_act1 = record(wires, "cut_grad_1", g_act1, "down")
     (g_head,) = vjp_head(g_act1)
     return loss_val, g_head, g_mid, g_tail, wires
 
@@ -172,8 +196,7 @@ def vertical_split_grads(branches: list[Branch], params_branches,
     acts, vjps = [], []
     for i, (br, pb, x) in enumerate(zip(branches, params_branches, xs)):
         a, v = jax.vjp(lambda p, xi=x, b=br: b.apply(p, xi), pb)
-        record(wires, f"branch_{i}_act", a, "up")
-        acts.append(a)
+        acts.append(record(wires, f"branch_{i}_act", a, "up"))
         vjps.append(v)
 
     def server_loss(pt, alist):
@@ -184,7 +207,7 @@ def vertical_split_grads(branches: list[Branch], params_branches,
         server_loss, argnums=(0, 1))(params_trunk, acts)
     g_branches = []
     for i, (v, ga) in enumerate(zip(vjps, g_acts)):
-        record(wires, f"branch_{i}_grad", ga, "down")
+        ga = record(wires, f"branch_{i}_grad", ga, "down")
         (gb,) = v(ga)
         g_branches.append(gb)
     return loss, g_branches, g_trunk, wires
@@ -207,7 +230,7 @@ def multihop_grads(model: SegModel, cuts: list[int], params_slabs, x, labels,
         act, v = jax.vjp(
             lambda p, a, lo=lo, hi=hi: _apply_hop(model, p, a, lo, hi),
             params_slabs[i], act)
-        record(wires, f"hop_{i}_act", act, "up")
+        act = record(wires, f"hop_{i}_act", act, "up")
         vjps.append(v)
 
     lo, hi = bounds[-2], bounds[-1]
@@ -219,7 +242,7 @@ def multihop_grads(model: SegModel, cuts: list[int], params_slabs, x, labels,
         final_loss, argnums=(0, 1))(params_slabs[-1], act)
     grads = [g_last]
     for i in reversed(range(len(vjps))):
-        record(wires, f"hop_{i}_grad", g_act, "down")
+        g_act = record(wires, f"hop_{i}_grad", g_act, "down")
         g_slab, g_act = vjps[i](g_act)
         grads.append(g_slab)
     return loss, list(reversed(grads)), wires
@@ -242,8 +265,7 @@ def multitask_grads(branches: list[Branch], params_branches,
     acts, vjps = [], []
     for i, (br, pb, x) in enumerate(zip(branches, params_branches, xs)):
         a, v = jax.vjp(lambda p, xi=x, b=br: b.apply(p, xi), pb)
-        record(wires, f"branch_{i}_act", a, "up")
-        acts.append(a)
+        acts.append(record(wires, f"branch_{i}_act", a, "up"))
         vjps.append(v)
 
     feat_fn = lambda alist: jnp.concatenate(alist, axis=-1)
@@ -261,7 +283,7 @@ def multitask_grads(branches: list[Branch], params_branches,
 
     g_branches = []
     for i, (v, ga) in enumerate(zip(vjps, g_acts_total)):
-        record(wires, f"branch_{i}_grad", ga, "down")
+        ga = record(wires, f"branch_{i}_grad", ga, "down")
         (gb,) = v(ga)
         g_branches.append(gb)
     return jnp.stack(losses), g_branches, g_heads, wires
@@ -282,26 +304,25 @@ def extended_vanilla_grads(branches: list[Branch], params_branches,
     acts, vjps = [], []
     for i, (br, pb, x) in enumerate(zip(branches, params_branches, xs)):
         a, v = jax.vjp(lambda p, xi=x, b=br: b.apply(p, xi), pb)
-        record(wires, f"branch_{i}_act", a, "up")
-        acts.append(a)
+        acts.append(record(wires, f"branch_{i}_act", a, "up"))
         vjps.append(v)
 
     def mid_fwd(pm, alist):
         return mid_apply(pm, jnp.concatenate(alist, axis=-1))
 
     mid_out, vjp_mid = jax.vjp(mid_fwd, params_mid, acts)
-    record(wires, "mid_act", mid_out, "up")
+    mid_out = record(wires, "mid_act", mid_out, "up")
 
     def server_loss(pt, m):
         return loss_fn(trunk_apply(pt, m), labels)
 
     loss, (g_trunk, g_mid_out) = jax.value_and_grad(
         server_loss, argnums=(0, 1))(params_trunk, mid_out)
-    record(wires, "mid_grad", g_mid_out, "down")
+    g_mid_out = record(wires, "mid_grad", g_mid_out, "down")
     g_mid, g_acts = vjp_mid(g_mid_out)
     g_branches = []
     for i, (v, ga) in enumerate(zip(vjps, g_acts)):
-        record(wires, f"branch_{i}_grad", ga, "down")
+        ga = record(wires, f"branch_{i}_grad", ga, "down")
         (gb,) = v(ga)
         g_branches.append(gb)
     return loss, g_branches, g_mid, g_trunk, wires

@@ -1,10 +1,14 @@
 """Compiled multi-client round engine (scan / vmap schedules over
 declarative split topologies)."""
-from repro.engine.engine import (RoundEngine, stack_batches, stack_trees,
-                                 tree_index, tree_update, unstack_tree)
-from repro.engine.topology import (Topology, multihop, u_shaped, vanilla,
-                                   vanilla_fns, vertical)
+from repro.engine.engine import (RoundEngine, stack_batches, stack_state,
+                                 stack_trees, tree_index, tree_update,
+                                 unstack_state, unstack_tree)
+from repro.engine.topology import (BRANCH_KINDS, KINDS, Topology,
+                                   extended_vanilla, multihop, multitask,
+                                   u_shaped, vanilla, vanilla_fns, vertical)
 
-__all__ = ["RoundEngine", "Topology", "vanilla", "vanilla_fns", "u_shaped",
-           "vertical", "multihop", "stack_batches", "stack_trees",
-           "unstack_tree", "tree_index", "tree_update"]
+__all__ = ["RoundEngine", "Topology", "KINDS", "BRANCH_KINDS", "vanilla",
+           "vanilla_fns", "u_shaped", "vertical", "multihop", "multitask",
+           "extended_vanilla", "stack_batches", "stack_trees",
+           "unstack_tree", "tree_index", "tree_update", "stack_state",
+           "unstack_state"]

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.core.accounting import (Meter, TurnCost, bytes_of_tree,
                                    flops_of_fn, probe_wire_records)
-from repro.engine.topology import Topology
+from repro.engine.topology import BRANCH_KINDS, Topology
 from repro.optim import apply_updates
 
 SCHEDULES = ("round_robin", "parallel")
@@ -64,6 +64,24 @@ def tree_update(tree, i, sub):
 def stack_batches(batches: list[dict]) -> dict:
     """[per-client batch dict] -> dict of (N, ...) arrays."""
     return {k: jnp.stack([b[k] for b in batches]) for k in batches[0]}
+
+
+def stack_state(state: dict, n: int) -> dict:
+    """List-of-trees trainer state -> stacked engine state.  The single
+    canonical copy (core.protocol re-exports it for back-compat)."""
+    return {"clients": stack_trees(state["clients"]),
+            "server": state["server"],
+            "opt_c": stack_trees(state["opt_c"]),
+            "opt_s": state["opt_s"],
+            "last_trained": jnp.asarray(state["last_trained"], jnp.int32)}
+
+
+def unstack_state(est: dict, n: int) -> dict:
+    return {"clients": unstack_tree(est["clients"], n),
+            "server": est["server"],
+            "opt_c": unstack_tree(est["opt_c"], n),
+            "opt_s": est["opt_s"],
+            "last_trained": int(est["last_trained"])}
 
 
 # ---------------------------------------------------------------------------
@@ -230,9 +248,10 @@ class RoundEngine:
     def _account_round(self, state, batches, *, first_round: bool):
         cost = self.turn_cost(state, batches)
         for ci in range(self.n_clients):
-            if self.topology.kind == "vertical":
+            if self.topology.kind in BRANCH_KINDS:
                 # the probe saw the whole round: each client owns only its
-                # branch's act/grad wires
+                # branch's act/grad wires (extended_vanilla's mid wires are
+                # the intermediate client's traffic — not billed here)
                 self.meter.add_flops(ci, cost.flops)
                 self.meter.add_wires(ci, [
                     w for w in cost.wires

@@ -8,14 +8,19 @@ The compiled `RoundEngine` consumes the uniform (client, server) contract:
     turn_grads(pc, ps, batch, lf)   -> (loss, g_client, g_server)
     turn_grads_wires(..., wires)    -> same, appending WireRecords
 
-Four paper configurations (Gupta & Raskar §3; Ceballos et al. 2020 for
-vertical; Fig. 4 for multi-hop):
+Six paper configurations (Gupta & Raskar §3; Ceballos et al. 2020 for
+vertical; Fig. 4 for multi-hop / extended / multi-task):
 
-  vanilla   — client [0, cut), server [cut, L) + loss
-  u_shaped  — client head+tail, server mid; labels never cross
-  vertical  — K modality branches -> concat -> server trunk (parallel-only)
-  multihop  — Tor-like slab chain; client owns the first slab, the
-              remaining slabs + loss run server-side
+  vanilla          — client [0, cut), server [cut, L) + loss
+  u_shaped         — client head+tail, server mid; labels never cross
+  vertical         — K modality branches -> concat -> server trunk
+                     (parallel-only)
+  multihop         — Tor-like slab chain; client owns the first slab, the
+                     remaining slabs + loss run server-side
+  multitask        — K modality branches -> concat -> T server heads, one
+                     loss per task (parallel-only)
+  extended_vanilla — K modality branches -> concat processed by an
+                     intermediate client -> server trunk (parallel-only)
 """
 from __future__ import annotations
 
@@ -27,7 +32,11 @@ import jax.numpy as jnp
 
 from repro.core import split as sp
 
-KINDS = ("vanilla", "u_shaped", "vertical", "multihop")
+KINDS = ("vanilla", "u_shaped", "vertical", "multihop", "multitask",
+         "extended_vanilla")
+
+# kinds whose "clients" axis is K modality branches all feeding ONE step
+BRANCH_KINDS = ("vertical", "multitask", "extended_vanilla")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,12 +101,12 @@ def vanilla_fns(init_full: Callable, split: Callable, client_apply: Callable,
 
     def turn_grads_wires(pc, ps, batch, loss_fn, wires):
         act, vjp_c = jax.vjp(lambda p: client_apply(p, batch), pc)
-        sp.record(wires, "cut_act", act, "up")
+        act = sp.record(wires, "cut_act", act, "up")
         (loss,), vjp_s = jax.vjp(
             lambda p, a: (loss_fn(server_apply(p, a), batch["labels"]),),
             ps, act)
         g_s, g_act = vjp_s((jnp.ones(()),))
-        sp.record(wires, "cut_grad", g_act, "down")
+        g_act = sp.record(wires, "cut_grad", g_act, "down")
         (g_c,) = vjp_c(g_act)
         return loss, g_c, g_s
 
@@ -143,6 +152,19 @@ def u_shaped(model: sp.SegModel, cut1: int, cut2: int) -> Topology:
 
 
 # ---------------------------------------------------------------------------
+# helpers shared by the branch-per-client kinds
+# ---------------------------------------------------------------------------
+
+def _unstack_clients(clients, n):
+    return [jax.tree_util.tree_map(lambda a, i=i: a[i], clients)
+            for i in range(n)]
+
+
+def _stack_grads(g_branches):
+    return jax.tree_util.tree_map(lambda *gs: jnp.stack(gs), *g_branches)
+
+
+# ---------------------------------------------------------------------------
 # vertical (multi-modal, parallel-only)
 # ---------------------------------------------------------------------------
 
@@ -160,23 +182,19 @@ def vertical(branch: sp.Branch, n_clients: int, trunk_init: Callable,
         return branch.init(kb), trunk_init(kt)
 
     def round_grads_wires(clients, ps, batch, loss_fn, wires):
-        params_list = [jax.tree_util.tree_map(lambda a, i=i: a[i], clients)
-                       for i in range(n_clients)]
+        params_list = _unstack_clients(clients, n_clients)
         xs = [batch["x"][i] for i in range(n_clients)]
         loss, g_branches, g_trunk, _ = sp.vertical_split_grads(
             [branch] * n_clients, params_list, trunk_apply, ps, xs,
             batch["labels"], loss_fn, wires)
-        g_clients = jax.tree_util.tree_map(
-            lambda *gs: jnp.stack(gs), *g_branches)
-        return loss, g_clients, g_trunk
+        return loss, _stack_grads(g_branches), g_trunk
 
     def round_grads(clients, ps, batch, loss_fn):
         return round_grads_wires(clients, ps, batch, loss_fn, [])
 
     def evaluate(clients, ps, batch):
-        feats = [branch.apply(
-            jax.tree_util.tree_map(lambda a, i=i: a[i], clients),
-            batch["x"][i]) for i in range(n_clients)]
+        feats = [branch.apply(pc, batch["x"][i]) for i, pc in
+                 enumerate(_unstack_clients(clients, n_clients))]
         return trunk_apply(ps, jnp.concatenate(feats, axis=-1))
 
     return Topology(kind="vertical", init=init,
@@ -221,3 +239,91 @@ def multihop(model: sp.SegModel, cuts: list[int]) -> Topology:
                     turn_grads_wires=turn_grads_wires, evaluate=evaluate,
                     client_fwd=lambda pc, b: model.apply_range(
                         pc, b["x"], 0, cuts[0]))
+
+
+# ---------------------------------------------------------------------------
+# multi-task (paper §5.1 Fig. 4b, parallel-only)
+# ---------------------------------------------------------------------------
+
+def multitask(branch: sp.Branch, n_clients: int,
+              head_inits: list[Callable],
+              head_applies: list[Callable]) -> Topology:
+    """K clients each hold one modality branch; the server concatenates
+    the features and trains T task heads, each with its own labels.  One
+    loss per task; the branch gradient is the SUM over tasks (exactly
+    `core.split.multitask_grads`).
+
+    Batch layout: {"x": (K, B, ...), "labels": (T, B)} — labels[t] are
+    task t's targets, shared across clients (server-held)."""
+    n_tasks = len(head_inits)
+
+    def init(key):
+        kb, *kh = jax.random.split(key, 1 + n_tasks)
+        return branch.init(kb), tuple(hi(k) for hi, k in zip(head_inits, kh))
+
+    def round_grads_wires(clients, ps, batch, loss_fn, wires):
+        params_list = _unstack_clients(clients, n_clients)
+        xs = [batch["x"][i] for i in range(n_clients)]
+        labels_per_task = [batch["labels"][t] for t in range(n_tasks)]
+        losses, g_branches, g_heads, _ = sp.multitask_grads(
+            [branch] * n_clients, params_list, head_applies, list(ps), xs,
+            labels_per_task, [loss_fn] * n_tasks, wires)
+        return losses.mean(), _stack_grads(g_branches), tuple(g_heads)
+
+    def round_grads(clients, ps, batch, loss_fn):
+        return round_grads_wires(clients, ps, batch, loss_fn, [])
+
+    def evaluate(clients, ps, batch):
+        feats = jnp.concatenate(
+            [branch.apply(pc, batch["x"][i]) for i, pc in
+             enumerate(_unstack_clients(clients, n_clients))], axis=-1)
+        # (T, B, C): engine accuracy broadcasts against (T, B) labels
+        return jnp.stack([h(p, feats) for h, p in zip(head_applies, ps)])
+
+    return Topology(kind="multitask", init=init,
+                    turn_grads=None, turn_grads_wires=round_grads_wires,
+                    evaluate=evaluate, round_grads=round_grads,
+                    client_fwd=lambda pc, b: branch.apply(pc, b["x"][0]))
+
+
+# ---------------------------------------------------------------------------
+# extended vanilla (paper §5.1 Fig. 4a, parallel-only)
+# ---------------------------------------------------------------------------
+
+def extended_vanilla(branch: sp.Branch, n_clients: int,
+                     mid_init: Callable, mid_apply: Callable,
+                     trunk_init: Callable, trunk_apply: Callable) -> Topology:
+    """Like `vertical`, but the concatenated features pass through an
+    INTERMEDIATE client's network before reaching the server trunk.  The
+    mid + trunk parameters live on the engine's server side as
+    {"mid", "trunk"}; the mid_act / mid_grad wires are the intermediate
+    client's traffic, not billed to the K data clients (mirrors the
+    multihop downstream-hop convention).
+
+    Batch layout: {"x": (K, B, ...), "labels": (B,)}."""
+    def init(key):
+        kb, km, kt = jax.random.split(key, 3)
+        return branch.init(kb), {"mid": mid_init(km), "trunk": trunk_init(kt)}
+
+    def round_grads_wires(clients, ps, batch, loss_fn, wires):
+        params_list = _unstack_clients(clients, n_clients)
+        xs = [batch["x"][i] for i in range(n_clients)]
+        loss, g_branches, g_mid, g_trunk, _ = sp.extended_vanilla_grads(
+            [branch] * n_clients, params_list, mid_apply, ps["mid"],
+            trunk_apply, ps["trunk"], xs, batch["labels"], loss_fn, wires)
+        return loss, _stack_grads(g_branches), {"mid": g_mid,
+                                                "trunk": g_trunk}
+
+    def round_grads(clients, ps, batch, loss_fn):
+        return round_grads_wires(clients, ps, batch, loss_fn, [])
+
+    def evaluate(clients, ps, batch):
+        feats = jnp.concatenate(
+            [branch.apply(pc, batch["x"][i]) for i, pc in
+             enumerate(_unstack_clients(clients, n_clients))], axis=-1)
+        return trunk_apply(ps["trunk"], mid_apply(ps["mid"], feats))
+
+    return Topology(kind="extended_vanilla", init=init,
+                    turn_grads=None, turn_grads_wires=round_grads_wires,
+                    evaluate=evaluate, round_grads=round_grads,
+                    client_fwd=lambda pc, b: branch.apply(pc, b["x"][0]))

@@ -1,13 +1,17 @@
-"""End-to-end training driver.
+"""End-to-end training driver: argparse -> `repro.api.Plan`.
 
-Two modes:
-  * monolithic  — standard data-parallel training of any --arch;
-  * split       — the paper's protocol: client segment + server segment,
-    only the cut activation crossing the tiers.  With --n-clients > 1
-    the compiled `repro.engine.RoundEngine` runs one whole round-robin
-    (or SplitFed-parallel, --schedule parallel) round per jitted call
-    and meters per-client wire bytes; --n-clients 1 keeps the single
-    fused pjit program.
+Every mode compiles through the one Plan/Session path:
+
+  * monolithic   — Plan(mode="large_batch", n_clients=1): standard
+    full-model training as the degenerate one-client sync-SGD round;
+  * split        — Plan(mode="vanilla"): the paper's protocol, client
+    segment + server segment, only the cut activation crossing the
+    tiers.  --n-clients > 1 runs the compiled round-robin (or
+    SplitFed-parallel) round; --n-clients 1 is a one-turn scan;
+  * fedavg / large_batch — the paper's comparison baselines, compiled
+    (vmap over clients).
+
+--wire stacks cut middleware, e.g. `--wire quantize_int8,dp_noise:0.05`.
 
 On this CPU container run reduced configs (--reduced); on a real pod the
 same driver takes the full configs (the dry-run proves they lower).
@@ -17,7 +21,7 @@ Examples:
         --arch phi4_mini_3_8b --reduced --steps 100 --mode split --cut 1
     PYTHONPATH=src python -m repro.launch.train \
         --arch phi4_mini_3_8b --reduced --steps 20 --mode split \
-        --n-clients 4 --schedule round_robin --topology vanilla
+        --n-clients 4 --schedule round_robin --wire quantize_int8
 """
 from __future__ import annotations
 
@@ -26,13 +30,14 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import checkpoint as ckpt
 from repro import optim
+from repro.api import (Plan, dp_noise, leakage_probe, lm_split_fns,
+                       quantize_int8, FullFns)
 from repro.configs import get_config
 from repro.data import synthetic as syn
-from repro.engine import RoundEngine, topology
+from repro.engine import tree_index
 from repro.models import build_model
 
 
@@ -49,79 +54,45 @@ def make_batch_fn(cfg, batch, seq):
     return fn
 
 
-def train_monolithic(model, args, key):
-    params = model.init(key)
+def parse_wire(spec: str):
+    """'quantize_int8,dp_noise:0.05,leakage_probe' -> transform stack."""
+    out = []
+    for tok in filter(None, spec.split(",")):
+        name, _, arg = tok.partition(":")
+        if name == "quantize_int8":
+            out.append(quantize_int8())
+        elif name == "dp_noise":
+            out.append(dp_noise(float(arg or 0.05)))
+        elif name == "leakage_probe":
+            out.append(leakage_probe())
+        else:
+            raise SystemExit(f"unknown wire transform {name!r}")
+    return tuple(out)
+
+
+def build_plan(model, args) -> Plan:
     opt = optim.adamw(args.lr, weight_decay=0.01)
-    opt_state = opt.init(params)
-
-    @jax.jit
-    def step(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(
-            lambda p: model.loss(p, batch))(params)
-        grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
-        ups, opt_state = opt.update(grads, opt_state, params)
-        return optim.apply_updates(params, ups), opt_state, loss, gnorm
-
-    return params, opt_state, step
-
-
-def train_split(model, args, key):
-    """The paper's vanilla split: returns a step over (client, server)."""
-    params = model.init(key)
-    pc, ps = model.split_params(params, args.cut)
-    opt_c = optim.adamw(args.lr, weight_decay=0.01)
-    opt_s = optim.adamw(args.lr, weight_decay=0.01)
-    sc, ss = opt_c.init(pc), opt_s.init(ps)
-
-    def split_loss(pc_, ps_, batch):
-        act = model.apply_client(pc_, batch, args.cut)
-        logits = model.apply_server(ps_, act, args.cut)
-        labels = batch["labels"]
-        lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-        return -jnp.take_along_axis(lp, labels[..., None], -1).mean()
-
-    @jax.jit
-    def step(state, batch):
-        pc_, ps_, sc_, ss_ = state
-        loss, (gc, gs) = jax.value_and_grad(
-            split_loss, argnums=(0, 1))(pc_, ps_, batch)
-        gc, _ = optim.clip_by_global_norm(gc, 1.0)
-        gs, _ = optim.clip_by_global_norm(gs, 1.0)
-        uc, sc_ = opt_c.update(gc, sc_, pc_)
-        us, ss_ = opt_s.update(gs, ss_, ps_)
-        return (optim.apply_updates(pc_, uc), optim.apply_updates(ps_, us),
-                sc_, ss_), loss
-
-    return (pc, ps, sc, ss), step
-
-
-def train_split_engine(model, args, key):
-    """Multi-client split training via the compiled round engine: one
-    jitted program per round, round-robin (paper §3) or SplitFed-parallel
-    scheduling, per-client wire accounting for free."""
+    if args.mode == "monolithic":
+        return Plan(mode="large_batch",
+                    model=FullFns(init=model.init, apply=model.forward),
+                    n_clients=1, optimizer=opt, clip_norm=1.0)
+    if args.mode in ("fedavg", "large_batch"):
+        return Plan(mode=args.mode,
+                    model=FullFns(init=model.init, apply=model.forward),
+                    n_clients=args.n_clients, optimizer=opt,
+                    local_steps=args.local_steps)
+    # split
     if args.topology != "vanilla":
         raise SystemExit(
             f"--topology {args.topology}: the LM launch path exposes the "
-            "vanilla cut only (apply_client/apply_server).  u_shaped / "
-            "vertical / multihop topologies run through repro.engine "
-            "directly — see tests/test_engine.py and README.")
-
-    topo = topology.vanilla_fns(
-        init_full=model.init,
-        split=lambda p: model.split_params(p, args.cut),
-        client_apply=lambda pc, b: model.apply_client(pc, b, args.cut),
-        server_apply=lambda ps, a: model.apply_server(ps, a, args.cut))
-
-    def loss_fn(logits, labels):
-        lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-        return -jnp.take_along_axis(lp, labels[..., None], -1).mean()
-
-    eng = RoundEngine(
-        topology=topo, loss_fn=loss_fn,
-        optimizer_client=optim.adamw(args.lr, weight_decay=0.01),
-        optimizer_server=optim.adamw(args.lr, weight_decay=0.01),
-        n_clients=args.n_clients, schedule=args.schedule)
-    return eng, eng.init(key)
+            "vanilla cut only (apply_client/apply_server).  Other "
+            "topologies build a repro.api.Plan over a SegModel or Branch "
+            "directly — see README and tests/test_api.py.")
+    return Plan(mode="vanilla", model=lm_split_fns(model, args.cut),
+                cut=args.cut, n_clients=args.n_clients,
+                schedule=args.schedule, optimizer=opt,
+                wire=parse_wire(args.wire),
+                clip_norm=1.0 if args.n_clients == 1 else None)
 
 
 def main():
@@ -132,7 +103,8 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--mode", choices=["monolithic", "split"],
+    ap.add_argument("--mode",
+                    choices=["monolithic", "split", "fedavg", "large_batch"],
                     default="monolithic")
     ap.add_argument("--cut", type=int, default=-1)
     ap.add_argument("--n-clients", type=int, default=1)
@@ -141,6 +113,10 @@ def main():
     ap.add_argument("--topology",
                     choices=["vanilla", "u_shaped", "vertical", "multihop"],
                     default="vanilla")
+    ap.add_argument("--wire", default="",
+                    help="comma list: quantize_int8,dp_noise:SIGMA,"
+                         "leakage_probe")
+    ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
@@ -156,62 +132,45 @@ def main():
     key = jax.random.PRNGKey(0)
     batch_fn = make_batch_fn(cfg, args.batch, args.seq)
 
-    history = []
-    extra: dict = {}
+    sess = build_plan(model, args).compile()
+    sess.init(key)
+
+    def round_batches(r):
+        ks = jax.random.split(jax.random.fold_in(key, r),
+                              args.n_clients)
+        return [batch_fn(k) for k in ks]
+
     t0 = time.time()
-    if args.mode == "monolithic":
-        params, opt_state, step = train_monolithic(model, args, key)
-        for i in range(args.steps):
-            key, k = jax.random.split(key)
-            params, opt_state, loss, gnorm = step(params, opt_state,
-                                                  batch_fn(k))
-            if i % args.log_every == 0 or i == args.steps - 1:
-                history.append({"step": i, "loss": float(loss),
-                                "gnorm": float(gnorm)})
-                print(f"step {i:5d} loss {float(loss):.4f} "
-                      f"gnorm {float(gnorm):.3f}", flush=True)
-        if args.ckpt:
-            ckpt.save(args.ckpt, params, step=args.steps)
-    elif args.n_clients > 1:
-        from repro.engine import stack_batches
-        eng, state = train_split_engine(model, args, key)
-        for i in range(args.steps):
-            key, k = jax.random.split(key)
-            batches = stack_batches(
-                [batch_fn(kk) for kk in jax.random.split(k, args.n_clients)])
-            state, losses = eng.run_round(state, batches)
-            loss = losses.mean()
-            if i % args.log_every == 0 or i == args.steps - 1:
-                history.append({"step": i, "loss": float(loss)})
-                print(f"round {i:5d} split-loss {float(loss):.4f} "
-                      f"({args.schedule}, {args.n_clients} clients)",
-                      flush=True)
+    losses = sess.fit(round_batches, rounds=args.steps,
+                      log_every=args.log_every)
+    dt = time.time() - t0
+
+    extra: dict = {}
+    if sess.plan.mode in ("vanilla",):
         extra = {"n_clients": args.n_clients, "schedule": args.schedule,
                  "topology": args.topology,
                  "client_gb": [round(g, 6) for g in
-                               eng.meter.totals()["client_gb"]]}
+                               sess.meter()["client_gb"]]}
+        if args.wire:
+            extra["wire"] = args.wire
+            extra["wire_report"] = sess.wire_report(round_batches(0))
         if args.ckpt:
-            ckpt.save(args.ckpt + ".clients", state["clients"],
+            if args.n_clients > 1:
+                # parallel clients diverge — persist ALL stacked trees
+                ckpt.save(args.ckpt + ".clients", sess.state["clients"],
+                          step=args.steps)
+            else:
+                ckpt.save(args.ckpt + ".client",
+                          tree_index(sess.state["clients"], 0),
+                          step=args.steps)
+            ckpt.save(args.ckpt + ".server", sess.state["server"],
                       step=args.steps)
-            ckpt.save(args.ckpt + ".server", state["server"],
-                      step=args.steps)
-    else:
-        state, step = train_split(model, args, key)
-        for i in range(args.steps):
-            key, k = jax.random.split(key)
-            state, loss = step(state, batch_fn(k))
-            if i % args.log_every == 0 or i == args.steps - 1:
-                history.append({"step": i, "loss": float(loss)})
-                print(f"step {i:5d} split-loss {float(loss):.4f}", flush=True)
-        if args.ckpt:
-            ckpt.save(args.ckpt + ".client", state[0], step=args.steps)
-            ckpt.save(args.ckpt + ".server", state[1], step=args.steps)
+    elif args.ckpt:
+        ckpt.save(args.ckpt, sess.state["global"], step=args.steps)
 
-    dt = time.time() - t0
     summary = {"arch": cfg.name, "mode": args.mode,
                "steps": args.steps, "wall_s": round(dt, 1),
-               "first_loss": history[0]["loss"],
-               "final_loss": history[-1]["loss"]}
+               "first_loss": losses[0], "final_loss": losses[-1]}
     summary.update(extra)
     print(json.dumps(summary))
 
