@@ -1,0 +1,89 @@
+"""Bench-regression gate: fail CI when throughput drops >20%.
+
+Compares a freshly measured bench JSON against the committed baseline
+(`BENCH_engine.json` / `BENCH_fleet.json` at the repo root): every
+`steps_per_sec` leaf present in the baseline must be measured at
+>= (1 - threshold) x its baseline value.  Leaves new in the current run
+pass (benches may grow); leaves MISSING from the current run fail (a
+bench silently dropping a configuration is itself a regression).
+
+Usage:
+    python benchmarks/check_regression.py \
+        --baseline BENCH_engine.json --current bench_out/BENCH_engine.json \
+        [--threshold 0.20] [--key steps_per_sec]
+
+Exit code 0 = within budget, 1 = regression (CI fails the job).  The CI
+workflow documents the `bench-override` PR label that skips this gate
+for intentional trade-offs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def collect(node, key: str, path: str = "") -> dict:
+    """All numeric leaves named `key`, flattened to dotted paths."""
+    out: dict = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            p = f"{path}.{k}" if path else k
+            if k == key and isinstance(v, (int, float)):
+                out[path or k] = float(v)
+            else:
+                out.update(collect(v, key, p))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max tolerated fractional drop (0.20 = 20%%)")
+    ap.add_argument("--key", default="steps_per_sec")
+    args = ap.parse_args()
+
+    base = collect(json.loads(pathlib.Path(args.baseline).read_text()),
+                   args.key)
+    curr = collect(json.loads(pathlib.Path(args.current).read_text()),
+                   args.key)
+    if not base:
+        print(f"no '{args.key}' leaves in {args.baseline} — nothing to gate")
+        return 1
+
+    failures = []
+    for path, ref in sorted(base.items()):
+        got = curr.get(path)
+        if got is None:
+            failures.append(f"{path}: present in baseline, missing from "
+                            "current run")
+            continue
+        floor = ref * (1.0 - args.threshold)
+        verdict = "FAIL" if got < floor else "ok"
+        print(f"{verdict:4s} {path or '<root>':40s} "
+              f"baseline {ref:10.2f}  current {got:10.2f}  "
+              f"floor {floor:10.2f}")
+        if got < floor:
+            failures.append(
+                f"{path}: {got:.2f} < {floor:.2f} "
+                f"({(1 - got / ref) * 100:.1f}% below baseline "
+                f"{ref:.2f}, budget {args.threshold * 100:.0f}%)")
+
+    if failures:
+        print(f"\nbench regression gate FAILED ({len(failures)}):",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        print("intentional? apply the 'bench-override' PR label "
+              "(see .github/workflows/ci.yml) or refresh the committed "
+              "baseline in the same PR.", file=sys.stderr)
+        return 1
+    print("bench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

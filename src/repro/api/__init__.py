@@ -15,16 +15,19 @@ point, with composable `WireTransform` middleware at the cut:
 The older `core.protocol` / `core.baselines` trainer classes are thin
 deprecation shims over this API.
 """
-from repro.api.baseline import FedAvgEngine, LargeBatchEngine
+from repro.api.baseline import (FedAvgEngine, FleetFedAvgEngine,
+                                FleetLargeBatchEngine, LargeBatchEngine)
 from repro.api.plan import (BASELINE_MODES, BRANCH_MODES, MODES, FullFns,
                             Plan, SPLIT_MODES, SplitFns, lm_split_fns,
                             softmax_xent)
 from repro.api.session import Session
 from repro.api.wire import (WireStack, WireTransform, dp_noise,
                             leakage_probe, quantize_int8, with_wire)
+from repro.engine.fleet import FleetRoundEngine, FleetSpec
 
 __all__ = ["Plan", "Session", "SplitFns", "FullFns", "lm_split_fns",
            "softmax_xent", "MODES", "SPLIT_MODES", "BASELINE_MODES",
            "BRANCH_MODES", "WireTransform", "WireStack", "quantize_int8",
            "dp_noise", "leakage_probe", "with_wire", "FedAvgEngine",
-           "LargeBatchEngine"]
+           "LargeBatchEngine", "FleetSpec", "FleetRoundEngine",
+           "FleetFedAvgEngine", "FleetLargeBatchEngine"]

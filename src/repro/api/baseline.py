@@ -16,17 +16,26 @@ per round for fedavg; grad push + model pull per step for large-batch),
 accumulated analytically outside jit like `RoundEngine` does.  The eager
 `core.baselines` trainers delegate here (backend="engine") and remain
 the reference loops (backend="eager").
+
+`FleetFedAvgEngine` / `FleetLargeBatchEngine` are the mesh-sharded
+variants (`Plan(fleet=FleetSpec(...))`): the stacked client axis
+partitions over the ("clients", "model") mesh via shard_map, the global
+model stays replicated, and the cross-client average is one psum of the
+per-shard sums — bit-identical to the single-device mean at one device,
+allclose at eight (summation order).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.accounting import Meter, bytes_of_tree, flops_of_fn
 from repro.engine.engine import stack_trees
+from repro.engine.fleet import FleetMeshMixin, FleetSpec
+from repro.nn.dist import shard_map
 from repro.optim import apply_updates
 
 
@@ -149,4 +158,90 @@ class LargeBatchEngine:
         return (jnp.argmax(logits, -1) == batch["labels"]).mean()
 
 
-__all__ = ["FedAvgEngine", "LargeBatchEngine"]
+# ---------------------------------------------------------------------------
+# mesh-sharded baselines (Plan(fleet=FleetSpec(...)))
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetFedAvgEngine(FleetMeshMixin, FedAvgEngine):
+    """FedAvg with the client axis sharded: each shard scans its local
+    clients' `local_steps` under vmap; the server average is one psum."""
+    fleet: FleetSpec | None = None
+    mesh: Any = None
+
+    def __post_init__(self):
+        sh, rep = self._fleet_setup()
+        super().__post_init__()
+        self._sm_round = shard_map(
+            self._shard_round, mesh=self.mesh,
+            in_specs=(rep, sh, sh), out_specs=(rep, sh, sh))
+
+    def init(self, key):
+        state = super().init(key)
+        return {"global": self._put(state["global"], self._rep_sharding),
+                "opt": self._put(state["opt"], self._client_sharding)}
+
+    def run_round(self, state, batches):
+        batches = self._put(batches, self._client_sharding)
+        return super().run_round(state, batches)
+
+    def _shard_round(self, global_, opts, batches):
+        def local(opt, batch):
+            def step(carry, _):
+                p, o = carry
+                loss, g = jax.value_and_grad(self._local_loss)(p, batch)
+                ups, o = self.optimizer.update(g, o, p)
+                return (apply_updates(p, ups), o), loss
+            (p, opt), losses = jax.lax.scan(
+                step, (global_, opt), None, length=self.local_steps)
+            return p, opt, losses[-1]
+
+        locals_, opts, losses = jax.vmap(local)(opts, batches)
+        return self._psum_mean(locals_), opts, losses
+
+    def _round(self, state, batches):
+        if self._replicated:      # every device redundantly runs the
+            return super()._round(state, batches)   # whole-fleet round
+        new_global, opts, losses = self._sm_round(
+            state["global"], state["opt"], batches)
+        return {"global": new_global, "opt": opts}, losses
+
+
+@dataclasses.dataclass
+class FleetLargeBatchEngine(FleetMeshMixin, LargeBatchEngine):
+    """Sync-SGD with the per-client gradient vmap sharded; the gradient
+    all-reduce is the one psum, the update replays replicated."""
+    fleet: FleetSpec | None = None
+    mesh: Any = None
+
+    def __post_init__(self):
+        sh, rep = self._fleet_setup()
+        super().__post_init__()
+        self._sm_step = shard_map(
+            self._shard_step, mesh=self.mesh,
+            in_specs=(rep, rep, sh), out_specs=(rep, rep, sh))
+
+    def init(self, key):
+        return self._put(super().init(key), self._rep_sharding)
+
+    def run_round(self, state, batches):
+        batches = self._put(batches, self._client_sharding)
+        return super().run_round(state, batches)
+
+    def _shard_step(self, global_, opt, batches):
+        losses, grads = jax.vmap(
+            lambda b: jax.value_and_grad(self._loss)(global_, b))(batches)
+        g_mean = self._psum_mean(grads)
+        ups, opt = self.optimizer.update(g_mean, opt, global_)
+        return apply_updates(global_, ups), opt, losses
+
+    def _step(self, state, batches):
+        if self._replicated:
+            return super()._step(state, batches)
+        new_global, opt, losses = self._sm_step(
+            state["global"], state["opt"], batches)
+        return {"global": new_global, "opt": opt}, losses
+
+
+__all__ = ["FedAvgEngine", "LargeBatchEngine", "FleetFedAvgEngine",
+           "FleetLargeBatchEngine"]

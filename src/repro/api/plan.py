@@ -36,11 +36,13 @@ import jax.numpy as jnp
 
 from repro import optim
 from repro.api import session as _session
-from repro.api.baseline import FedAvgEngine, LargeBatchEngine
+from repro.api.baseline import (FedAvgEngine, FleetFedAvgEngine,
+                                FleetLargeBatchEngine, LargeBatchEngine)
 from repro.api.wire import WireStack, WireTransform, with_wire
 from repro.core import split as sp
 from repro.engine import RoundEngine
 from repro.engine import topology as topo
+from repro.engine.fleet import FleetRoundEngine, FleetSpec
 
 MODES = ("vanilla", "u_shaped", "vertical", "multihop", "multitask",
          "extended_vanilla", "fedavg", "large_batch")
@@ -127,6 +129,7 @@ class Plan:
     wire: Sequence[WireTransform] = ()
     local_steps: int = 1                  # fedavg
     clip_norm: float | None = None
+    fleet: FleetSpec | None = None        # shard clients over a mesh
 
     # ---- validation helpers -----------------------------------------------
 
@@ -202,19 +205,25 @@ class Plan:
                 raise ValueError(f"Plan(mode={self.mode!r}): baselines "
                                  "have no cut wire to transform")
             fns = _full_fns(self.model)
+            kw = dict(init_fn=fns.init, apply_fn=fns.apply,
+                      loss_fn=self.loss_fn, optimizer=opt_c,
+                      n_clients=self.n_clients)
             if self.mode == "fedavg":
-                eng = FedAvgEngine(init_fn=fns.init, apply_fn=fns.apply,
-                                   loss_fn=self.loss_fn, optimizer=opt_c,
-                                   n_clients=self.n_clients,
-                                   local_steps=self.local_steps)
+                kw["local_steps"] = self.local_steps
+                cls = (FleetFedAvgEngine if self.fleet is not None
+                       else FedAvgEngine)
             else:
-                eng = LargeBatchEngine(init_fn=fns.init, apply_fn=fns.apply,
-                                       loss_fn=self.loss_fn, optimizer=opt_c,
-                                       n_clients=self.n_clients)
-            return _session.Session(self, eng, stack)
+                cls = (FleetLargeBatchEngine if self.fleet is not None
+                       else LargeBatchEngine)
+            if self.fleet is not None:
+                kw["fleet"] = self.fleet
+            return _session.Session(self, cls(**kw), stack)
         topology = with_wire(self._topology(), stack)
-        eng = RoundEngine(topology=topology, loss_fn=self.loss_fn,
-                          optimizer_client=opt_c, optimizer_server=opt_s,
-                          n_clients=self.n_clients,
-                          schedule=self.effective_schedule, sync=self.sync)
-        return _session.Session(self, eng, stack)
+        cls = RoundEngine if self.fleet is None else FleetRoundEngine
+        kw = dict(topology=topology, loss_fn=self.loss_fn,
+                  optimizer_client=opt_c, optimizer_server=opt_s,
+                  n_clients=self.n_clients,
+                  schedule=self.effective_schedule, sync=self.sync)
+        if self.fleet is not None:
+            kw["fleet"] = self.fleet
+        return _session.Session(self, cls(**kw), stack)

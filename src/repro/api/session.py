@@ -31,6 +31,7 @@ class Session:
         self.engine = engine
         self.wire_stack = wire_stack
         self.state = None
+        self._probe_state_cache = None
 
     # ---- lifecycle ---------------------------------------------------------
 
@@ -41,13 +42,29 @@ class Session:
     def init(self, key=None, *, seed: int = 0):
         if key is None:
             key = jax.random.PRNGKey(seed)
+        self.state = self._engine_init(key)
+        self._probe_state_cache = None   # probes read self.state now
+        return self.state
+
+    def _engine_init(self, key):
         if self.is_split:
             identical = self.engine.topology.kind not in BRANCH_KINDS
-            self.state = self.engine.init(key,
-                                          identical_clients=identical)
-        else:
-            self.state = self.engine.init(key)
-        return self.state
+            return self.engine.init(key, identical_clients=identical)
+        return self.engine.init(key)
+
+    def _state_for_probe(self):
+        """State the shape probes (`wire_report`, `leakage_report`) run
+        against.  Probes are idempotent AND side-effect-free: before the
+        session is initialised they use a cached throwaway state instead
+        of committing a default-seed init — a later `init(key)` /
+        `fit(key=...)` still controls the real initialization (the old
+        behaviour silently discarded that key)."""
+        if self.state is not None:
+            return self.state
+        if self._probe_state_cache is None:
+            self._probe_state_cache = self._engine_init(
+                jax.random.PRNGKey(0))
+        return self._probe_state_cache
 
     # ---- training ----------------------------------------------------------
 
@@ -92,6 +109,8 @@ class Session:
 
     def evaluate(self, batch, *, client: int = 0):
         """Accuracy on one (unstacked) eval batch."""
+        if self.state is None:       # same auto-init as run_round —
+            self.init()              # evaluate commits state, probes don't
         if self.is_split:
             return self.engine.evaluate(self.state, batch, client=client)
         return self.engine.evaluate(self.state, batch)
@@ -103,17 +122,18 @@ class Session:
     def wire_report(self, batches) -> list[dict]:
         """Everything that crosses the boundary in ONE turn for this batch
         shape, priced through the wire middleware stack.  Baselines report
-        their model pull/push instead (they have no cut)."""
-        if self.state is None:
-            self.init()
+        their model pull/push instead (they have no cut).  Idempotent per
+        batch shape and free of session side effects — probing never
+        initialises training state or touches the meter."""
+        state = self._state_for_probe()
         if not self.is_split:
             pb = self.engine._param_bytes
             if pb is None:
-                self.engine._probe(self.state, self._prep(batches))
+                self.engine._probe(state, self._prep(batches))
                 pb = self.engine._param_bytes
             return [{"name": "model_pull", "direction": "down", "bytes": pb},
                     {"name": "model_push", "direction": "up", "bytes": pb}]
-        cost = self.engine.turn_cost(self.state, self._prep(batches))
+        cost = self.engine.turn_cost(state, self._prep(batches))
         return [{"name": w.name, "direction": w.direction,
                  "shape": tuple(w.shape), "dtype": str(w.dtype),
                  "bytes": w.bytes} for w in cost.wires]
@@ -132,14 +152,13 @@ class Session:
         if topology.client_fwd is None:
             raise ValueError(f"{topology.kind} topology exposes no "
                              "client forward to probe")
-        if self.state is None:
-            self.init()
+        state = self._state_for_probe()
         if topology.kind in BRANCH_KINDS:
-            pc = tree_index(self.state["clients"], client)
+            pc = tree_index(state["clients"], client)
             x_raw = batch["x"][client]
             probe_batch = {**batch, "x": batch["x"][client:client + 1]}
         else:
-            pc = tree_index(self.state["clients"], client)
+            pc = tree_index(state["clients"], client)
             x_raw = batch.get("x", next(iter(batch.values())))
             probe_batch = batch
         act = topology.client_fwd(pc, probe_batch)

@@ -3,6 +3,12 @@
 Horizontal: each client holds different *samples* (the paper's Fig. 1 —
 many small radiology centers).  Vertical: each client holds different
 *features/modalities* of the same samples (the paper's §2 third config).
+
+The `*_batches` emitters produce the STACKED engine layouts directly —
+`(N, B, ...)` for the horizontal schedules, `(K, B, ...)` for the branch
+fan-in topologies — so heterogeneous-hospital scenarios (Dirichlet label
+skew, per-modality vertical splits) drop straight into
+`Session.fit`/`FleetRoundEngine.run_round` with no reshaping.
 """
 from __future__ import annotations
 
@@ -51,3 +57,49 @@ def dirichlet_label_skew(key, labels: jnp.ndarray, n_clients: int,
         for ci, part in enumerate(np.split(idx, cuts)):
             client_idx[ci].extend(part.tolist())
     return [jnp.asarray(sorted(ix)) for ix in client_idx]
+
+
+def dirichlet_client_batches(key, batch: dict, n_clients: int,
+                             per_client: int, alpha: float = 0.5) -> dict:
+    """Non-IID per-shard batches in the stacked engine layout: every
+    client draws `per_client` samples from its OWN Dirichlet(alpha)
+    label allocation over the pool, so client i's label histogram is
+    skewed (small alpha -> each hospital sees few conditions) while the
+    round batch stays rectangular for `vmap`/`shard_map`.  Clients whose
+    allocation is smaller than `per_client` resample with replacement
+    (the paper's small-center regime).  Returns {k: (N, per_client, ...)}.
+    """
+    import numpy as np
+    assert "labels" in batch, "dirichlet_client_batches needs labels"
+    pools = dirichlet_label_skew(key, batch["labels"], n_clients,
+                                 alpha=alpha)
+    rng = np.random.default_rng(
+        int(jax.random.randint(jax.random.fold_in(key, 1), (),
+                               0, 2**31 - 1)))
+    n_total = int(batch["labels"].shape[0])
+    picks = []
+    for pool in pools:
+        pool = np.asarray(pool)
+        if pool.size == 0:                 # extreme skew: empty client
+            pool = np.arange(n_total)      # falls back to the full pool
+        picks.append(rng.choice(pool, size=per_client,
+                                replace=pool.size < per_client))
+    idx = jnp.asarray(np.stack(picks))                    # (N, per)
+    return {k: v[idx] for k, v in batch.items()}
+
+
+def vertical_modality_batches(batch: dict, modality_keys: list[str]) -> dict:
+    """Per-modality vertical split in the branch-topology layout: one
+    client per modality key, samples aligned (the same patients), labels
+    server-held.  All modalities must share a feature shape (the branch
+    net is structurally identical per client — pad upstream if not).
+    Returns {"x": (K, B, ...), "labels": (B,)}."""
+    shapes = {k: tuple(batch[k].shape) for k in modality_keys}
+    if len(set(shapes.values())) != 1:
+        raise ValueError(
+            f"modalities must share one feature shape, got {shapes}; "
+            "project/pad them to a common width first")
+    out = {"x": jnp.stack([batch[k] for k in modality_keys])}
+    if "labels" in batch:
+        out["labels"] = batch["labels"]
+    return out

@@ -1,14 +1,16 @@
 """Compiled multi-client round engine (scan / vmap schedules over
-declarative split topologies)."""
+declarative split topologies; `fleet` shards the client axis over a
+device mesh)."""
 from repro.engine.engine import (RoundEngine, stack_batches, stack_state,
                                  stack_trees, tree_index, tree_update,
                                  unstack_state, unstack_tree)
+from repro.engine.fleet import FleetRoundEngine, FleetSpec
 from repro.engine.topology import (BRANCH_KINDS, KINDS, Topology,
                                    extended_vanilla, multihop, multitask,
                                    u_shaped, vanilla, vanilla_fns, vertical)
 
-__all__ = ["RoundEngine", "Topology", "KINDS", "BRANCH_KINDS", "vanilla",
-           "vanilla_fns", "u_shaped", "vertical", "multihop", "multitask",
-           "extended_vanilla", "stack_batches", "stack_trees",
-           "unstack_tree", "tree_index", "tree_update", "stack_state",
-           "unstack_state"]
+__all__ = ["RoundEngine", "FleetRoundEngine", "FleetSpec", "Topology",
+           "KINDS", "BRANCH_KINDS", "vanilla", "vanilla_fns", "u_shaped",
+           "vertical", "multihop", "multitask", "extended_vanilla",
+           "stack_batches", "stack_trees", "unstack_tree", "tree_index",
+           "tree_update", "stack_state", "unstack_state"]

@@ -1,0 +1,294 @@
+"""Fleet-scale round engine: the client axis sharded over a device mesh.
+
+`RoundEngine` (PR 1) stacks the N client pytrees along a leading axis
+and compiles one round per XLA program — but the whole stack lives on
+ONE device, so client count is capped by a single accelerator's memory
+and FLOPs.  `FleetRoundEngine` lowers the same two schedules through
+`shard_map` over a ("clients", "model") mesh (`launch.mesh.
+make_fleet_mesh`), so N clients partition across D devices with the
+identical round semantics:
+
+  schedule="parallel"   — each shard vmaps its n/D local client turns;
+      the server sees ONE `psum` of the per-shard cut-gradient sums
+      (psum/N == the single-device mean bit-for-bit at D=1), then every
+      shard applies the identical server update.  Client-axis compute
+      and memory scale ~linearly with D.
+  schedule="round_robin" — the paper's serial schedule cannot be
+      parallelised (client i+1 needs client i's weights), so the fleet
+      version shards MEMORY, not time: the round runs as D phases; in
+      phase d only shard d's local `lax.scan` is committed, and the
+      carry (server params + optimizer state + the p2p weight handoff)
+      walks the device ring via `ppermute`.  SPMD makes every shard
+      trace the same program, so a sharded round-robin round costs D
+      redundant local scans — exactness over speed; use the parallel
+      schedule for throughput scaling.
+
+Topologies whose "clients" are K modality branches feeding one step
+(vertical / multitask / extended_vanilla) have no shardable client
+fleet — K is the modality count — so they run replicated on the mesh
+(every device computes the identical round; in/out specs are `P()`).
+
+Resource accounting is untouched: `TurnCost` probing is shape-static
+and happens once per batch shape outside the compiled program, so the
+per-client meters stay bit-identical to the single-device engine's —
+per-shard costs are accumulated analytically and reduced once on the
+host, never inside traced code.
+
+Baselines get the same treatment in `repro.api.baseline`
+(FleetFedAvgEngine / FleetLargeBatchEngine); `Plan(fleet=FleetSpec(...))`
+routes every mode here with no other user-code change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.engine.engine import (RoundEngine, apply_updates, tree_index,
+                                 tree_update)
+from repro.launch.mesh import make_fleet_mesh
+from repro.nn.dist import (shard_map, tree_ppermute, tree_psum,
+                           tree_replicate_from, tree_where)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """How to lay a Plan's client fleet onto a device mesh.
+
+    n_devices          — client-axis mesh size (None = every visible
+                         device); n_clients must divide evenly.
+    client_sharding    — "shard" partitions the stacked client axis;
+                         "replicate" keeps every device a full replica
+                         (what the branch fan-in topologies force).
+    server_replication — True keeps server params replicated per shard
+                         with psum'd cut gradients (the SplitFed server
+                         is small by construction).  False would shard
+                         the server over the "model" axis — reserved,
+                         not implemented yet.
+    model_parallel     — size of the trailing "model" mesh axis
+                         (reserved for server tensor parallelism).
+    """
+    n_devices: int | None = None
+    client_sharding: str = "shard"          # "shard" | "replicate"
+    server_replication: bool = True
+    model_parallel: int = 1
+
+    def __post_init__(self):
+        if self.client_sharding not in ("shard", "replicate"):
+            raise ValueError("client_sharding must be 'shard' or "
+                             f"'replicate', got {self.client_sharding!r}")
+        if not self.server_replication:
+            raise NotImplementedError(
+                "server_replication=False (server sharding over the "
+                "'model' mesh axis) is reserved; the mesh already "
+                "carries the axis but no engine consumes it yet")
+
+
+class FleetMeshMixin:
+    """Mesh plumbing every fleet engine shares (`FleetRoundEngine` here,
+    the sharded baselines in `repro.api.baseline`): builds the
+    ("clients", "model") mesh from the spec, validates client
+    divisibility, and owns state placement + the sharded all-reduce
+    mean.  Expects dataclass fields `fleet`, `mesh`, `n_clients`."""
+
+    def _fleet_setup(self, *, force_replicate: bool = False):
+        """Returns (client_spec, replicated_spec) PartitionSpecs."""
+        if self.fleet is None:
+            self.fleet = FleetSpec()
+        if self.mesh is None:
+            self.mesh = make_fleet_mesh(
+                self.fleet.n_devices,
+                model_parallel=self.fleet.model_parallel)
+        self._ax = self.mesh.axis_names[0]
+        self._replicated = (force_replicate
+                            or self.fleet.client_sharding == "replicate")
+        self._n_shards = 1 if self._replicated \
+            else int(self.mesh.shape[self._ax])
+        if self.n_clients % self._n_shards:
+            raise ValueError(
+                f"n_clients={self.n_clients} must divide evenly over the "
+                f"{self._n_shards}-way client mesh axis (pass "
+                "FleetSpec(n_devices=...) or resize the fleet)")
+        self._n_local = self.n_clients // self._n_shards
+        sh = P() if self._replicated else P(self._ax)
+        self._client_sharding = NamedSharding(self.mesh, sh)
+        self._rep_sharding = NamedSharding(self.mesh, P())
+        return sh, P()
+
+    def _put(self, tree, sharding):
+        return jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, sharding), tree)
+
+    def _psum_mean(self, tree):
+        """Per-shard sum over the stacked axis -> one psum -> /N: the
+        sharded all-reduce mean (bitwise == mean(0) on one shard)."""
+        local = jax.tree_util.tree_map(lambda a: a.sum(0), tree)
+        return jax.tree_util.tree_map(
+            lambda a: a / self.n_clients, tree_psum(local, self._ax))
+
+
+@dataclasses.dataclass
+class FleetRoundEngine(FleetMeshMixin, RoundEngine):
+    """`RoundEngine` with the stacked client axis sharded over a mesh.
+
+    Drop-in: same state layout, same `run_round/turn_cost/evaluate/
+    meter` surface, bit-identical math at n_devices=1 (tests/
+    test_fleet.py).  State arrays come back `device_put` onto the mesh
+    (clients/opt_c partitioned along the client axis, server replicated)
+    and every round runs as one jitted shard_map program.
+    """
+    fleet: FleetSpec | None = None
+    mesh: Any = None
+
+    def __post_init__(self):
+        self._fleet_setup(force_replicate=self.topology.parallel_only)
+        super().__post_init__()
+        sh, rep = P(self._ax), P()
+        kw = dict(mesh=self.mesh)
+        self._sm_parallel = shard_map(
+            self._parallel_body, in_specs=(sh, sh, rep, rep, sh),
+            out_specs=(sh, sh, rep, rep, sh), **kw)
+        self._sm_scan = shard_map(
+            self._scan_body, in_specs=(sh, sh, rep, rep, rep, sh),
+            out_specs=(sh, sh, rep, rep, rep, sh), **kw)
+        self._sm_replicated = shard_map(
+            super()._round, in_specs=(rep, rep), out_specs=(rep, rep), **kw)
+
+    # ---- state placement ---------------------------------------------------
+
+    def shard_state(self, state: dict) -> dict:
+        """Lay engine state onto the mesh: clients/opt_c partitioned
+        along the client axis, server side replicated.  Idempotent —
+        safe on restored checkpoints."""
+        return {"clients": self._put(state["clients"],
+                                     self._client_sharding),
+                "opt_c": self._put(state["opt_c"], self._client_sharding),
+                "server": self._put(state["server"], self._rep_sharding),
+                "opt_s": self._put(state["opt_s"], self._rep_sharding),
+                "last_trained": jax.device_put(state["last_trained"],
+                                               self._rep_sharding)}
+
+    def init(self, key, *, identical_clients: bool = True):
+        return self.shard_state(
+            super().init(key, identical_clients=identical_clients))
+
+    def run_round(self, state, batches):
+        batches = jax.device_put(batches, self._client_sharding)
+        return super().run_round(state, batches)
+
+    # ---- round dispatch ----------------------------------------------------
+
+    def _round(self, state, batches):
+        if self._replicated:
+            return self._sm_replicated(state, batches)
+        if self.schedule == "parallel":
+            clients, opt_c, server, opt_s, losses = self._sm_parallel(
+                state["clients"], state["opt_c"], state["server"],
+                state["opt_s"], batches)
+            return {"clients": clients, "server": server, "opt_c": opt_c,
+                    "opt_s": opt_s,
+                    "last_trained": state["last_trained"]}, losses
+        clients, opt_c, server, opt_s, last, losses = self._sm_scan(
+            state["clients"], state["opt_c"], state["server"],
+            state["opt_s"], state["last_trained"], batches)
+        return {"clients": clients, "server": server, "opt_c": opt_c,
+                "opt_s": opt_s, "last_trained": last}, losses
+
+    # ---- parallel (SplitFed) shard body ------------------------------------
+
+    def _parallel_body(self, clients, opt_c, server, opt_s, batches):
+        """Per-shard vmap over the local clients; ONE psum carries the
+        cut-gradient sum to the (replicated) server update.  sum/N over
+        the psum is bit-identical to the single-device mean(0) at D=1
+        and the mathematically identical mean at D>1 (summation order
+        differs across shards — allclose, not bitwise)."""
+        losses, g_c, g_s = jax.vmap(
+            lambda pc, b: self.topology.turn_grads(
+                pc, server, b, self.loss_fn),
+            in_axes=(0, 0))(clients, batches)
+        ups_c, opt_c = jax.vmap(self.optimizer_client.update)(
+            g_c, opt_c, clients)
+        clients = apply_updates(clients, ups_c)
+        g_mean = self._psum_mean(g_s)
+        ups_s, opt_s = self.optimizer_server.update(g_mean, opt_s, server)
+        server = apply_updates(server, ups_s)
+        return clients, opt_c, server, opt_s, losses
+
+    # ---- round-robin (phased scan + ppermute ring) -------------------------
+
+    def _scan_body(self, clients, opt_c, server, opt_s, last, batches):
+        """The serial round as D phases.  Shard d's local scan is the
+        real one in phase d (every other shard's run is masked out);
+        the carry — server params/opt state, the global last-trained
+        index, and the last-trained client's post-update weights (the
+        p2p handoff payload) — rides the device ring via ppermute.  The
+        final carry is replicated off shard D-1 with one masked psum."""
+        ax, n_local = self._ax, self._n_local
+        n_shards, n = self._n_shards, self.n_clients
+        me = lax.axis_index(ax)
+        sync = self.sync == "p2p" and n > 1
+
+        def local_prev(clients, last):
+            """The previously-trained client's weights when it lives in
+            THIS shard (read back from the updated local stack, exactly
+            like the single-device scan's dynamic gather)."""
+            li = jnp.clip(last - me * n_local, 0, n_local - 1)
+            here = (last >= me * n_local) & (last < (me + 1) * n_local)
+            return here, tree_index(clients, li)
+
+        def local_scan(clients, opt_c, server, opt_s, last, handoff):
+            def body(carry, inp):
+                li, batch = inp
+                clients, opt_c, server, opt_s, last, handoff = carry
+                gi = me * n_local + li
+                pc = tree_index(clients, li)
+                if sync:
+                    here, prev_here = local_prev(clients, last)
+                    prev = tree_where(here, prev_here, handoff)
+                    take = (last >= 0) & (last != gi)
+                    pc = tree_where(take, prev, pc)
+                loss, g_c, g_s = self.topology.turn_grads(
+                    pc, server, batch, self.loss_fn)
+                ups_c, oc = self.optimizer_client.update(
+                    g_c, tree_index(opt_c, li), pc)
+                pc = apply_updates(pc, ups_c)
+                ups_s, opt_s = self.optimizer_server.update(
+                    g_s, opt_s, server)
+                server = apply_updates(server, ups_s)
+                return ((tree_update(clients, li, pc),
+                         tree_update(opt_c, li, oc),
+                         server, opt_s, gi, pc), loss)
+
+            init = (clients, opt_c, server, opt_s, last, handoff)
+            return lax.scan(body, init,
+                            (jnp.arange(n_local, dtype=jnp.int32), batches))
+
+        # the handoff entering phase 0: the globally last-trained
+        # client's weights, replicated off whichever shard owns them
+        # (zeros before the first-ever turn — masked out by `take`)
+        here, mine = local_prev(clients, last)
+        handoff = tree_replicate_from(mine, ax, here & (last >= 0))
+
+        perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+        carry = (server, opt_s, last, handoff)
+        my_losses = None
+        for d in range(n_shards):
+            (cl, oc, srv, osrv, lst, hnd), lo = local_scan(
+                clients, opt_c, *carry)
+            active = me == d
+            clients = tree_where(active, cl, clients)
+            opt_c = tree_where(active, oc, opt_c)
+            my_losses = jnp.where(
+                active, lo,
+                jnp.zeros_like(lo) if my_losses is None else my_losses)
+            carry = tree_ppermute((srv, osrv, lst, hnd), ax, perm)
+        # the ring left shard D-1's carry on shard 0; replicate it
+        server, opt_s, last, _ = tree_replicate_from(carry, ax, me == 0)
+        return clients, opt_c, server, opt_s, last, my_losses
+
+
+__all__ = ["FleetSpec", "FleetRoundEngine", "FleetMeshMixin"]

@@ -38,6 +38,44 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh_compat(shape, axes)
 
 
+# ---------------------------------------------------------------------------
+# Fleet mesh: the client-axis mesh the fleet engines shard over
+# ---------------------------------------------------------------------------
+
+FLEET_CLIENT_AXIS = "clients"
+FLEET_MODEL_AXIS = "model"
+
+
+def make_fleet_mesh(n_devices: int | None = None, *, model_parallel: int = 1,
+                    client_axis: str = FLEET_CLIENT_AXIS,
+                    model_axis: str = FLEET_MODEL_AXIS):
+    """THE mesh factory for the fleet engines: a ("clients", "model")
+    mesh whose leading axis partitions the stacked client pytree and
+    whose trailing axis is reserved for server tensor parallelism
+    (size 1 until the server side is sharded).
+
+    `n_devices=None` takes every visible device.  On CPU the visible
+    device count honors XLA's host-platform override, so CI exercises
+    real 8-way sharding on one machine:
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+    (set it BEFORE the first jax import — the backend reads it once)."""
+    avail = jax.device_count()
+    if n_devices is None:
+        n_devices = max(1, avail // model_parallel)
+    need = n_devices * model_parallel
+    if need > avail:
+        raise ValueError(
+            f"fleet mesh needs {need} devices ({n_devices} x "
+            f"{model_parallel}) but only {avail} are visible. On CPU, "
+            "export XLA_FLAGS="
+            f"'--xla_force_host_platform_device_count={need}' before "
+            "importing jax to split the host into virtual devices.")
+    return make_mesh_compat((n_devices, model_parallel),
+                            (client_axis, model_axis))
+
+
 def batch_axes(mesh) -> tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 

@@ -33,8 +33,8 @@ import jax
 
 from repro import checkpoint as ckpt
 from repro import optim
-from repro.api import (Plan, dp_noise, leakage_probe, lm_split_fns,
-                       quantize_int8, FullFns)
+from repro.api import (FleetSpec, Plan, dp_noise, leakage_probe,
+                       lm_split_fns, quantize_int8, FullFns)
 from repro.configs import get_config
 from repro.data import synthetic as syn
 from repro.engine import tree_index
@@ -72,7 +72,13 @@ def parse_wire(spec: str):
 
 def build_plan(model, args) -> Plan:
     opt = optim.adamw(args.lr, weight_decay=0.01)
+    fleet = (FleetSpec(n_devices=args.fleet_devices or None)
+             if args.fleet else None)
     if args.mode == "monolithic":
+        if fleet is not None:
+            raise SystemExit("--fleet: monolithic training has no client "
+                             "axis to shard (n_clients=1); use --mode "
+                             "split/fedavg/large_batch with --n-clients")
         return Plan(mode="large_batch",
                     model=FullFns(init=model.init, apply=model.forward),
                     n_clients=1, optimizer=opt, clip_norm=1.0)
@@ -80,7 +86,7 @@ def build_plan(model, args) -> Plan:
         return Plan(mode=args.mode,
                     model=FullFns(init=model.init, apply=model.forward),
                     n_clients=args.n_clients, optimizer=opt,
-                    local_steps=args.local_steps)
+                    local_steps=args.local_steps, fleet=fleet)
     # split
     if args.topology != "vanilla":
         raise SystemExit(
@@ -91,7 +97,7 @@ def build_plan(model, args) -> Plan:
     return Plan(mode="vanilla", model=lm_split_fns(model, args.cut),
                 cut=args.cut, n_clients=args.n_clients,
                 schedule=args.schedule, optimizer=opt,
-                wire=parse_wire(args.wire),
+                wire=parse_wire(args.wire), fleet=fleet,
                 clip_norm=1.0 if args.n_clients == 1 else None)
 
 
@@ -117,6 +123,12 @@ def main():
                     help="comma list: quantize_int8,dp_noise:SIGMA,"
                          "leakage_probe")
     ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--fleet", action="store_true",
+                    help="shard the client axis over a device mesh "
+                         "(repro.engine.fleet); on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
+    ap.add_argument("--fleet-devices", type=int, default=0,
+                    help="client-axis mesh size (0 = all visible devices)")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()

@@ -258,6 +258,75 @@ def test_wire_transforms_actually_cross_and_training_still_works():
     assert 0.0 <= rep["dcor_input_vs_act"] <= 1.0
 
 
+# ---------------------------------------------------------------------------
+# probe idempotency: probing must never change what training computes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["vanilla", "u_shaped", "fedavg"])
+def test_fit_twice_meters_exactly_once_per_round(mode):
+    """Regression: two fit() calls on one Session must meter exactly the
+    same totals as one fit() over the same rounds — the wire-shape probe
+    is cached per batch shape and never double-counts."""
+    key = jax.random.PRNGKey(7)
+    twice = _plan_for(mode).compile()
+    twice.init(key)
+    twice.fit(lambda r: _round_data(mode, key, r), rounds=2)
+    twice.fit(lambda r: _round_data(mode, key, 2 + r), rounds=2)
+    once = _plan_for(mode).compile()
+    once.init(key)
+    once.fit(lambda r: _round_data(mode, key, r), rounds=4)
+    a, b = twice.engine.meter, once.engine.meter
+    assert (a.flops, a.bytes_up, a.bytes_down, a.sync_bytes) == \
+        (b.flops, b.bytes_up, b.bytes_down, b.sync_bytes)
+    tree_equal(twice.state, once.state)
+
+
+def test_wire_report_is_idempotent_and_side_effect_free():
+    key = jax.random.PRNGKey(8)
+    sess = _plan_for("vanilla").compile()
+    shards = image_shards(key, 2)
+    # probing BEFORE init must not commit training state...
+    r1 = sess.wire_report(shards)
+    assert sess.state is None
+    r2 = sess.wire_report(shards)
+    assert r1 == r2
+    # ...and must not touch the meter
+    assert sess.engine.meter.totals()["client_gb"] == [0.0, 0.0]
+    # a later fit(key=...) therefore still controls the real init:
+    # (the old behaviour silently trained from the probe's seed-0 state)
+    losses = sess.fit(lambda r: image_shards(jax.random.fold_in(key, r), 2),
+                      rounds=2, key=key)
+    fresh = _plan_for("vanilla").compile()
+    fresh.init(key)
+    ref = fresh.fit(lambda r: image_shards(jax.random.fold_in(key, r), 2),
+                    rounds=2)
+    assert losses == ref
+    tree_equal(sess.state, fresh.state)
+    # post-fit reports keep pricing the same wires
+    assert sess.wire_report(shards) == r1
+
+
+def test_probe_then_evaluate_auto_inits():
+    """Regression: evaluate() after a pre-init probe must auto-init like
+    run_round() does, not crash on state=None."""
+    sess = _plan_for("vanilla").compile()
+    shards = image_shards(jax.random.PRNGKey(10), 2)
+    sess.wire_report(shards)
+    assert sess.state is None
+    acc = float(sess.evaluate(shards[0]))
+    assert 0.0 <= acc <= 1.0
+    assert sess.state is not None
+
+
+def test_wire_report_on_baseline_is_side_effect_free():
+    sess = _plan_for("fedavg").compile()
+    shards = image_shards(jax.random.PRNGKey(9), 2)
+    rep = sess.wire_report(shards)
+    assert sess.state is None
+    assert {w["name"] for w in rep} == {"model_pull", "model_push"}
+    assert sess.wire_report(shards) == rep
+
+
 def test_wire_on_baseline_mode_rejected():
     with pytest.raises(ValueError, match="no cut wire"):
         Plan(mode="fedavg", model=make_model(),

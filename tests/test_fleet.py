@@ -1,0 +1,341 @@
+"""Fleet engine tests: the sharded client axis must be invisible.
+
+* n_devices=1 parity — every Plan mode lowered through
+  `FleetSpec(n_devices=1)` produces BIT-IDENTICAL losses, state trees
+  and meters to the single-device engines (the shard_map program is the
+  same math; a size-1 mesh adds only identity collectives);
+* 8-virtual-device parity — same plans at n_devices=8 stay allclose
+  (cross-shard psum changes the summation order, nothing else).  These
+  tests need `XLA_FLAGS=--xla_force_host_platform_device_count=8` set
+  before jax initialises — the nightly fleet lane does exactly that —
+  and auto-skip on a single-device backend;
+* a `slow` subprocess test gives the plain (single-device) suite real
+  8-way coverage by re-running the vanilla parity under the flag;
+* mesh factory validation and the non-IID fleet partition emitters.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.api import FleetSpec, Plan, quantize_int8, softmax_xent
+from repro.core import split as sp
+from repro.data import partition, synthetic as syn
+from repro.engine.fleet import FleetRoundEngine
+from repro.launch.mesh import make_fleet_mesh
+from repro.nn import convnets as C
+from repro.nn import layers as L
+
+N_CLS = 4
+CFG = C.CNNConfig(name="t", width_mult=0.25, plan=(16, 16, "M", 32, "M"),
+                  n_classes=N_CLS)
+PLAN_LAYERS = C.vgg_plan(CFG)
+
+
+def make_model():
+    return sp.list_segmodel(
+        n_segments=len(PLAN_LAYERS),
+        init=lambda k: C.vgg_init(k, CFG),
+        layer_apply=lambda p, i, x: C.vgg_layer_apply(p, PLAN_LAYERS[i], x))
+
+
+def make_branch(din=64, dout=16):
+    return sp.Branch(
+        init=lambda k: {"w": L.dense_init(k, din, dout, bias=True)},
+        apply=lambda p, x: jax.nn.relu(L.dense_apply(p["w"], x)))
+
+
+def _dense(k_in, k_out):
+    init = lambda k: {"w": L.dense_init(k, k_in, k_out, bias=True)}
+    apply = lambda p, f: L.dense_apply(p["w"], f)
+    return init, apply
+
+
+def image_shards(key, n, per=8):
+    b = syn.image_batch(key, per * n, N_CLS)
+    return [{"x": b["images"][i * per:(i + 1) * per],
+             "labels": b["labels"][i * per:(i + 1) * per]}
+            for i in range(n)]
+
+
+def modal_batch(key, per_task_labels=False):
+    b = syn.multimodal_batch(key, 16, N_CLS, dim_a=64, dim_b=64)
+    labels = b["labels"]
+    if per_task_labels:
+        labels = jnp.stack([labels, (labels + 1) % N_CLS])
+    return {"x": jnp.stack([b["mod_a"], b["mod_b"]]), "labels": labels}
+
+
+def plan_kwargs(mode: str, n_clients: int = 2) -> dict:
+    common = dict(loss_fn=softmax_xent, optimizer=optim.adamw(1e-2),
+                  n_clients=n_clients)
+    if mode == "vanilla":
+        return dict(mode=mode, model=make_model(), cut=2, **common)
+    if mode == "u_shaped":
+        return dict(mode=mode, model=make_model(), cuts=(1, 4), **common)
+    if mode == "multihop":
+        return dict(mode=mode, model=make_model(), cuts=[1, 3], **common)
+    if mode == "vertical":
+        return dict(mode=mode, branch=make_branch(),
+                    trunk=_dense(32, N_CLS), **common)
+    if mode == "multitask":
+        return dict(mode=mode, branch=make_branch(),
+                    heads=(_dense(32, N_CLS), _dense(32, N_CLS)), **common)
+    if mode == "extended_vanilla":
+        return dict(mode=mode, branch=make_branch(), mid=_dense(32, 24),
+                    trunk=_dense(24, N_CLS), **common)
+    if mode == "fedavg":
+        return dict(mode=mode, model=make_model(), local_steps=2, **common)
+    return dict(mode="large_batch", model=make_model(), **common)
+
+
+def round_data(mode: str, key, r: int, n_clients: int = 2):
+    k = jax.random.fold_in(key, r)
+    if mode == "multitask":
+        return modal_batch(k, per_task_labels=True)
+    if mode in ("vertical", "extended_vanilla"):
+        return modal_batch(k)
+    return image_shards(k, n_clients)
+
+
+def run_pair(mode, fleet, *, n_clients=2, rounds=2, extra=None):
+    """(plain session, fleet session) trained on identical data."""
+    key = jax.random.PRNGKey(0)
+    out = []
+    for f in (None, fleet):
+        kw = plan_kwargs(mode, n_clients)
+        kw.update(extra or {})
+        sess = Plan(fleet=f, **kw).compile()
+        sess.init(key)
+        losses = sess.fit(
+            lambda r: round_data(mode, key, r, n_clients), rounds=rounds)
+        out.append((sess, losses))
+    return out
+
+
+def assert_tree_equal(a, b, *, exact=True, rtol=1e-5, atol=1e-6):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if exact:
+            np.testing.assert_array_equal(x, y)
+        else:
+            np.testing.assert_allclose(x, y, rtol=rtol, atol=atol)
+
+
+ALL_MODES = ("vanilla", "u_shaped", "vertical", "multihop", "multitask",
+             "extended_vanilla", "fedavg", "large_batch")
+
+
+# ---------------------------------------------------------------------------
+# n_devices=1: the fleet path is bit-for-bit the single-device engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_fleet_one_device_bitwise_parity(mode):
+    (plain, l_plain), (fleet, l_fleet) = run_pair(
+        mode, FleetSpec(n_devices=1))
+    assert l_plain == l_fleet, (mode, l_plain, l_fleet)
+    assert_tree_equal(plain.state, fleet.state, exact=True)
+    assert plain.engine.meter.totals() == fleet.engine.meter.totals()
+
+
+def test_fleet_parallel_schedule_bitwise_parity():
+    (plain, l_plain), (fleet, l_fleet) = run_pair(
+        "vanilla", FleetSpec(n_devices=1), extra={"schedule": "parallel"})
+    assert l_plain == l_fleet
+    assert_tree_equal(plain.state, fleet.state, exact=True)
+
+
+def test_fleet_wire_middleware_bitwise_parity():
+    (plain, l_plain), (fleet, l_fleet) = run_pair(
+        "vanilla", FleetSpec(n_devices=1),
+        extra={"wire": (quantize_int8(),)})
+    assert l_plain == l_fleet
+    assert_tree_equal(plain.state, fleet.state, exact=True)
+    assert plain.engine.meter.bytes_up == fleet.engine.meter.bytes_up
+
+
+def test_fleet_evaluate_and_wire_report_match():
+    (plain, _), (fleet, _) = run_pair("vanilla", FleetSpec(n_devices=1))
+    batch = image_shards(jax.random.PRNGKey(9), 2)[0]
+    assert float(plain.evaluate(batch)) == float(fleet.evaluate(batch))
+    sh = image_shards(jax.random.PRNGKey(9), 2)
+    assert plain.wire_report(sh) == fleet.wire_report(sh)
+
+
+# ---------------------------------------------------------------------------
+# validation + mesh factory
+# ---------------------------------------------------------------------------
+
+def test_fleet_mesh_overcommit_error_teaches_xla_flags():
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_fleet_mesh(jax.device_count() + 1)
+
+
+class _FakeMesh:
+    """Minimal mesh double with a >1 client axis so the divisibility
+    check fires on single-device hosts too (raises before tracing)."""
+    axis_names = ("clients", "model")
+    shape = {"clients": 2, "model": 1}
+
+
+def test_fleet_uneven_clients_rejected():
+    from repro.engine import topology as topo
+    with pytest.raises(ValueError, match="divide evenly"):
+        FleetRoundEngine(
+            topology=topo.vanilla(make_model(), 2),
+            loss_fn=softmax_xent,
+            optimizer_client=optim.sgd(0.1),
+            optimizer_server=optim.sgd(0.1),
+            n_clients=3, fleet=FleetSpec(), mesh=_FakeMesh())
+
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError, match="client_sharding"):
+        FleetSpec(client_sharding="bogus")
+    with pytest.raises(NotImplementedError, match="server_replication"):
+        FleetSpec(server_replication=False)
+
+
+# ---------------------------------------------------------------------------
+# non-IID fleet partitions
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_client_batches_layout_and_skew():
+    key = jax.random.PRNGKey(0)
+    b = syn.image_batch(key, 256, N_CLS)
+    batch = {"x": b["images"], "labels": b["labels"]}
+    n, per = 8, 16
+    out = partition.dirichlet_client_batches(key, batch, n, per, alpha=0.1)
+    assert out["x"].shape == (n, per) + batch["x"].shape[1:]
+    assert out["labels"].shape == (n, per)
+    # strong skew: per-client label histograms must differ across clients
+    hists = np.stack([np.bincount(np.asarray(out["labels"][i]),
+                                  minlength=N_CLS) for i in range(n)])
+    assert np.std(hists.astype(float), axis=0).sum() > 0
+    # and every client's samples come from the source pool
+    assert set(np.unique(out["labels"])) <= set(
+        np.unique(np.asarray(batch["labels"])))
+
+
+def test_dirichlet_client_batches_feed_the_engine():
+    key = jax.random.PRNGKey(1)
+    b = syn.image_batch(key, 128, N_CLS)
+    batch = {"x": b["images"], "labels": b["labels"]}
+    sess = Plan(fleet=FleetSpec(n_devices=1),
+                **plan_kwargs("vanilla", n_clients=4)).compile()
+    sess.init(key)
+    stacked = partition.dirichlet_client_batches(key, batch, 4, 8)
+    losses = sess.fit(lambda r: stacked, rounds=2)
+    assert all(np.isfinite(losses))
+
+
+def test_vertical_modality_batches_layout():
+    key = jax.random.PRNGKey(2)
+    b = syn.multimodal_batch(key, 16, N_CLS, dim_a=64, dim_b=64)
+    out = partition.vertical_modality_batches(b, ["mod_a", "mod_b"])
+    assert out["x"].shape == (2, 16, 64)
+    assert out["labels"].shape == (16,)
+    np.testing.assert_array_equal(np.asarray(out["x"][0]),
+                                  np.asarray(b["mod_a"]))
+
+
+def test_vertical_modality_batches_rejects_ragged_dims():
+    key = jax.random.PRNGKey(3)
+    b = syn.multimodal_batch(key, 16, N_CLS, dim_a=64, dim_b=32)
+    with pytest.raises(ValueError, match="share one feature shape"):
+        partition.vertical_modality_batches(b, ["mod_a", "mod_b"])
+
+
+# ---------------------------------------------------------------------------
+# 8 virtual devices (nightly fleet lane sets XLA_FLAGS; auto-skip else)
+# ---------------------------------------------------------------------------
+
+needs_8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "before jax initialises (nightly fleet lane)")
+
+
+@needs_8
+@pytest.mark.parametrize("mode,schedule", [
+    ("vanilla", "parallel"), ("vanilla", "round_robin"),
+    ("u_shaped", "round_robin"), ("multihop", "round_robin"),
+    ("fedavg", None), ("large_batch", None)])
+def test_fleet_eight_devices_allclose(mode, schedule):
+    extra = {} if schedule is None else {"schedule": schedule}
+    (plain, l_plain), (fleet, l_fleet) = run_pair(
+        mode, FleetSpec(n_devices=8), n_clients=8, extra=extra)
+    np.testing.assert_allclose(l_plain, l_fleet, rtol=1e-4)
+    assert_tree_equal(plain.state, fleet.state, exact=False,
+                      rtol=1e-3, atol=1e-4)
+    assert plain.engine.meter.totals() == fleet.engine.meter.totals()
+
+
+@needs_8
+def test_fleet_eight_devices_state_is_sharded():
+    sess = Plan(fleet=FleetSpec(n_devices=8),
+                **plan_kwargs("vanilla", n_clients=8)).compile()
+    sess.init(jax.random.PRNGKey(0))
+    sess.fit(lambda r: round_data("vanilla", jax.random.PRNGKey(0), r, 8),
+             rounds=1)
+    leaf = jax.tree_util.tree_leaves(sess.state["clients"])[0]
+    assert "clients" in str(leaf.sharding.spec)
+    srv = jax.tree_util.tree_leaves(sess.state["server"])[0]
+    assert srv.sharding.spec == jax.sharding.PartitionSpec()
+
+
+# ---------------------------------------------------------------------------
+# slow: real 8-way sharding from a single-device suite via subprocess
+# ---------------------------------------------------------------------------
+
+_SUBPROC = r"""
+import jax, json
+import numpy as np
+import sys
+sys.path.insert(0, {test_dir!r})
+from test_fleet import run_pair, FleetSpec
+out = {{}}
+for schedule in ("parallel", "round_robin"):
+    (plain, lp), (fleet, lf) = run_pair(
+        "vanilla", FleetSpec(n_devices=8), n_clients=8,
+        extra={{"schedule": schedule}})
+    out[schedule] = {{
+        "devices": jax.device_count(),
+        "losses_close": bool(np.allclose(lp, lf, rtol=1e-4)),
+        "state_close": bool(all(
+            np.allclose(np.asarray(x), np.asarray(y), rtol=1e-3, atol=1e-4)
+            for x, y in zip(jax.tree_util.tree_leaves(plain.state),
+                            jax.tree_util.tree_leaves(fleet.state)))),
+    }}
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_fleet_eight_virtual_devices_subprocess():
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    code = _SUBPROC.format(test_dir=os.path.dirname(__file__))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    for schedule, r in out.items():
+        assert r["devices"] == 8, (schedule, r)
+        assert r["losses_close"], (schedule, r)
+        assert r["state_close"], (schedule, r)
