@@ -1,16 +1,21 @@
-"""Bench-regression gate: fail CI when throughput drops >20%.
+"""Bench-regression gate: fail CI when a metric regresses >threshold.
 
 Compares a freshly measured bench JSON against the committed baseline
-(`BENCH_engine.json` / `BENCH_fleet.json` at the repo root): every
-`steps_per_sec` leaf present in the baseline must be measured at
->= (1 - threshold) x its baseline value.  Leaves new in the current run
-pass (benches may grow); leaves MISSING from the current run fail (a
-bench silently dropping a configuration is itself a regression).
+(`BENCH_engine.json` / `BENCH_fleet.json` / `BENCH_wire.json` at the
+repo root): every `--key` leaf present in the baseline must be measured
+within budget of its baseline value.  `--direction higher` (default)
+gates metrics where bigger is better (steps/sec: current must be
+>= (1 - threshold) x baseline); `--direction lower` gates metrics where
+smaller is better (bytes-at-cut: current must be <= (1 + threshold) x
+baseline — a byte-count regression fails alongside a throughput one).
+Leaves new in the current run pass (benches may grow); leaves MISSING
+from the current run fail (a bench silently dropping a configuration is
+itself a regression).
 
 Usage:
     python benchmarks/check_regression.py \
         --baseline BENCH_engine.json --current bench_out/BENCH_engine.json \
-        [--threshold 0.20] [--key steps_per_sec]
+        [--threshold 0.20] [--key steps_per_sec] [--direction higher|lower]
 
 Exit code 0 = within budget, 1 = regression (CI fails the job).  The CI
 workflow documents the `bench-override` PR label that skips this gate
@@ -42,8 +47,12 @@ def main() -> int:
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--current", required=True)
     ap.add_argument("--threshold", type=float, default=0.20,
-                    help="max tolerated fractional drop (0.20 = 20%%)")
+                    help="max tolerated fractional regression (0.20 = 20%%)")
     ap.add_argument("--key", default="steps_per_sec")
+    ap.add_argument("--direction", choices=("higher", "lower"),
+                    default="higher",
+                    help="'higher': bigger is better (throughput); "
+                         "'lower': smaller is better (wire bytes)")
     args = ap.parse_args()
 
     base = collect(json.loads(pathlib.Path(args.baseline).read_text()),
@@ -61,16 +70,24 @@ def main() -> int:
             failures.append(f"{path}: present in baseline, missing from "
                             "current run")
             continue
-        floor = ref * (1.0 - args.threshold)
-        verdict = "FAIL" if got < floor else "ok"
+        if args.direction == "higher":
+            bound = ref * (1.0 - args.threshold)
+            bad = got < bound
+            word = "floor"
+        else:
+            bound = ref * (1.0 + args.threshold)
+            bad = got > bound
+            word = "ceil"
+        verdict = "FAIL" if bad else "ok"
         print(f"{verdict:4s} {path or '<root>':40s} "
               f"baseline {ref:10.2f}  current {got:10.2f}  "
-              f"floor {floor:10.2f}")
-        if got < floor:
+              f"{word} {bound:10.2f}")
+        if bad:
+            rel = abs(1 - got / ref) * 100 if ref else float("inf")
             failures.append(
-                f"{path}: {got:.2f} < {floor:.2f} "
-                f"({(1 - got / ref) * 100:.1f}% below baseline "
-                f"{ref:.2f}, budget {args.threshold * 100:.0f}%)")
+                f"{path}: {got:.2f} vs {word} {bound:.2f} "
+                f"({rel:.1f}% {'below' if args.direction == 'higher' else 'above'} "
+                f"baseline {ref:.2f}, budget {args.threshold * 100:.0f}%)")
 
     if failures:
         print(f"\nbench regression gate FAILED ({len(failures)}):",

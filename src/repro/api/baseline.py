@@ -33,14 +33,56 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.accounting import Meter, bytes_of_tree, flops_of_fn
+from repro.core.wire_compress import as_dense, pack_int8, payload_nbytes
 from repro.engine.engine import stack_trees
 from repro.engine.fleet import FleetMeshMixin, FleetSpec
-from repro.nn.dist import shard_map
+from repro.nn.dist import shard_map_norep as shard_map
 from repro.optim import apply_updates
 
 
+class _WireModelMixin:
+    """Wire middleware over the baselines' model pull/push payloads.
+
+    The baselines have no cut, but they DO have a wire — the whole model
+    crosses it (pull down, push up).  A `wire_stack` squeezes every
+    crossing leafwise through the stack exactly like the cut payloads:
+    clients train on the RECEIVED (e.g. int8-quantized) pull, the server
+    averages the received pushes, and the master copy stays full
+    precision server-side.  The fake and physical int8 flavours are
+    bit-identical here too (`dequant(pack(x)) == fake_quant(x)`)."""
+
+    def _wire_tree(self, tree, name: str, direction: str):
+        if not getattr(self, "wire_stack", None):
+            return tree
+        return jax.tree_util.tree_map(
+            lambda a: as_dense(self.wire_stack.apply(a, name, direction)),
+            tree)
+
+    def _wire_model_bytes(self, tree) -> int:
+        """Wire bytes of one model payload through the stack.  For a
+        physical stack the `bytes_fn` claim is checked against the
+        ACTUAL dtypes the pack kernel emits (one `eval_shape` per leaf —
+        no compute): the same accounting invariant `core.split.record`
+        enforces for cut payloads, applied to the baselines' model
+        pull/push wire."""
+        stack = getattr(self, "wire_stack", None)
+        if not stack:
+            return bytes_of_tree(tree)
+        claim = stack.tree_wire_bytes(tree)
+        if stack.physical:
+            actual = sum(
+                payload_nbytes(jax.eval_shape(pack_int8, leaf))
+                for leaf in jax.tree_util.tree_leaves(tree))
+            if actual != claim:
+                from repro.api.wire import WireAccountingError
+                raise WireAccountingError(
+                    f"baseline model wire: bytes_fn claims {claim}, the "
+                    f"packed payloads hold {actual}")
+        return claim
+
+
 @dataclasses.dataclass
-class FedAvgEngine:
+class FedAvgEngine(_WireModelMixin):
     """One compiled fedavg round: vmap(clients) x scan(local_steps)."""
     init_fn: Callable            # key -> params
     apply_fn: Callable           # (params, batch) -> logits
@@ -48,12 +90,14 @@ class FedAvgEngine:
     optimizer: "Optimizer"
     n_clients: int
     local_steps: int = 1
+    wire_stack: Any = None       # repro.api.wire.WireStack | None
 
     def __post_init__(self):
         self.meter = Meter(self.n_clients)
         self._flops_per_batch = None
         self._param_bytes = None
-        self._round_jit = jax.jit(self._round)
+        self._wire_bytes = None
+        self._round_jit = jax.jit(self._round, donate_argnums=(0,))
 
     def init(self, key):
         params = self.init_fn(key)
@@ -65,6 +109,8 @@ class FedAvgEngine:
         return self.loss_fn(self.apply_fn(params, batch), batch["labels"])
 
     def _round(self, state, batches):
+        pulled = self._wire_tree(state["global"], "model_pull", "down")
+
         def local(opt, batch):
             def step(carry, _):
                 p, o = carry
@@ -72,11 +118,15 @@ class FedAvgEngine:
                 ups, o = self.optimizer.update(g, o, p)
                 return (apply_updates(p, ups), o), loss
             (p, opt), losses = jax.lax.scan(
-                step, (state["global"], opt), None, length=self.local_steps)
+                step, (pulled, opt), None, length=self.local_steps)
             return p, opt, losses[-1]
 
         locals_, opts, losses = jax.vmap(local)(state["opt"], batches)
-        new_global = jax.tree_util.tree_map(lambda a: a.mean(0), locals_)
+        # push: each client's local model crosses the wire before the
+        # average (per-row quant along the last axis is invariant to the
+        # stacked leading client dim, so this is per-client quantization)
+        pushed = self._wire_tree(locals_, "model_push", "up")
+        new_global = jax.tree_util.tree_map(lambda a: a.mean(0), pushed)
         return {"global": new_global, "opt": opts}, losses
 
     def run_round(self, state, batches):
@@ -84,10 +134,10 @@ class FedAvgEngine:
         self._probe(state, batches)
         out = self._round_jit(state, batches)
         for ci in range(self.n_clients):
-            self.meter.bytes_down[ci] += self._param_bytes      # model pull
+            self.meter.bytes_down[ci] += self._wire_bytes       # model pull
             self.meter.add_flops(ci,
                                  self._flops_per_batch * self.local_steps)
-            self.meter.bytes_up[ci] += self._param_bytes        # model push
+            self.meter.bytes_up[ci] += self._wire_bytes         # model push
         return out
 
     def _probe(self, state, batches):
@@ -97,6 +147,7 @@ class FedAvgEngine:
                 self.apply_fn, state["global"], one)
         if self._param_bytes is None:
             self._param_bytes = bytes_of_tree(state["global"])
+            self._wire_bytes = self._wire_model_bytes(state["global"])
 
     def evaluate(self, state, batch):
         logits = self.apply_fn(state["global"], batch)
@@ -104,19 +155,21 @@ class FedAvgEngine:
 
 
 @dataclasses.dataclass
-class LargeBatchEngine:
+class LargeBatchEngine(_WireModelMixin):
     """One compiled sync-SGD step: vmap grads, mean, one update."""
     init_fn: Callable
     apply_fn: Callable           # (params, batch) -> logits
     loss_fn: Callable
     optimizer: "Optimizer"
     n_clients: int
+    wire_stack: Any = None       # repro.api.wire.WireStack | None
 
     def __post_init__(self):
         self.meter = Meter(self.n_clients)
         self._flops_per_batch = None
         self._param_bytes = None
-        self._step_jit = jax.jit(self._step)
+        self._wire_bytes = None
+        self._step_jit = jax.jit(self._step, donate_argnums=(0,))
 
     def init(self, key):
         params = self.init_fn(key)
@@ -126,10 +179,12 @@ class LargeBatchEngine:
         return self.loss_fn(self.apply_fn(params, batch), batch["labels"])
 
     def _step(self, state, batches):
+        pulled = self._wire_tree(state["global"], "model_pull", "down")
         losses, grads = jax.vmap(
-            lambda b: jax.value_and_grad(self._loss)(state["global"], b)
+            lambda b: jax.value_and_grad(self._loss)(pulled, b)
         )(batches)
-        g_mean = jax.tree_util.tree_map(lambda a: a.mean(0), grads)
+        pushed = self._wire_tree(grads, "grad_push", "up")
+        g_mean = jax.tree_util.tree_map(lambda a: a.mean(0), pushed)
         ups, opt = self.optimizer.update(g_mean, state["opt"],
                                          state["global"])
         return {"global": apply_updates(state["global"], ups),
@@ -138,11 +193,11 @@ class LargeBatchEngine:
     def run_round(self, state, batches):
         self._probe(state, batches)
         out = self._step_jit(state, batches)
-        grad_bytes = self._param_bytes      # grads mirror the param tree
+        grad_bytes = self._wire_bytes       # grads mirror the param tree
         for ci in range(self.n_clients):
             self.meter.add_flops(ci, self._flops_per_batch)
             self.meter.bytes_up[ci] += grad_bytes       # grad push
-            self.meter.bytes_down[ci] += self._param_bytes  # model pull
+            self.meter.bytes_down[ci] += self._wire_bytes   # model pull
         return out
 
     def _probe(self, state, batches):
@@ -152,6 +207,7 @@ class LargeBatchEngine:
                 self.apply_fn, state["global"], one)
         if self._param_bytes is None:
             self._param_bytes = bytes_of_tree(state["global"])
+            self._wire_bytes = self._wire_model_bytes(state["global"])
 
     def evaluate(self, state, batch):
         logits = self.apply_fn(state["global"], batch)
@@ -186,6 +242,8 @@ class FleetFedAvgEngine(FleetMeshMixin, FedAvgEngine):
         return super().run_round(state, batches)
 
     def _shard_round(self, global_, opts, batches):
+        pulled = self._wire_tree(global_, "model_pull", "down")
+
         def local(opt, batch):
             def step(carry, _):
                 p, o = carry
@@ -193,11 +251,12 @@ class FleetFedAvgEngine(FleetMeshMixin, FedAvgEngine):
                 ups, o = self.optimizer.update(g, o, p)
                 return (apply_updates(p, ups), o), loss
             (p, opt), losses = jax.lax.scan(
-                step, (global_, opt), None, length=self.local_steps)
+                step, (pulled, opt), None, length=self.local_steps)
             return p, opt, losses[-1]
 
         locals_, opts, losses = jax.vmap(local)(opts, batches)
-        return self._psum_mean(locals_), opts, losses
+        pushed = self._wire_tree(locals_, "model_push", "up")
+        return self._psum_mean(pushed), opts, losses
 
     def _round(self, state, batches):
         if self._replicated:      # every device redundantly runs the
@@ -229,9 +288,10 @@ class FleetLargeBatchEngine(FleetMeshMixin, LargeBatchEngine):
         return super().run_round(state, batches)
 
     def _shard_step(self, global_, opt, batches):
+        pulled = self._wire_tree(global_, "model_pull", "down")
         losses, grads = jax.vmap(
-            lambda b: jax.value_and_grad(self._loss)(global_, b))(batches)
-        g_mean = self._psum_mean(grads)
+            lambda b: jax.value_and_grad(self._loss)(pulled, b))(batches)
+        g_mean = self._psum_mean(self._wire_tree(grads, "grad_push", "up"))
         ups, opt = self.optimizer.update(g_mean, opt, global_)
         return apply_updates(global_, ups), opt, losses
 

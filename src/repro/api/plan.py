@@ -201,13 +201,11 @@ class Plan:
         stack = WireStack(self.wire)
         opt_c, opt_s = self._optimizers()
         if self.mode in BASELINE_MODES:
-            if stack:
-                raise ValueError(f"Plan(mode={self.mode!r}): baselines "
-                                 "have no cut wire to transform")
             fns = _full_fns(self.model)
             kw = dict(init_fn=fns.init, apply_fn=fns.apply,
                       loss_fn=self.loss_fn, optimizer=opt_c,
-                      n_clients=self.n_clients)
+                      n_clients=self.n_clients,
+                      wire_stack=stack if stack else None)
             if self.mode == "fedavg":
                 kw["local_steps"] = self.local_steps
                 cls = (FleetFedAvgEngine if self.fleet is not None
@@ -223,7 +221,8 @@ class Plan:
         kw = dict(topology=topology, loss_fn=self.loss_fn,
                   optimizer_client=opt_c, optimizer_server=opt_s,
                   n_clients=self.n_clients,
-                  schedule=self.effective_schedule, sync=self.sync)
+                  schedule=self.effective_schedule, sync=self.sync,
+                  wire_stack=stack if stack else None)
         if self.fleet is not None:
             kw["fleet"] = self.fleet
         return _session.Session(self, cls(**kw), stack)

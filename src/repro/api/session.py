@@ -122,21 +122,34 @@ class Session:
     def wire_report(self, batches) -> list[dict]:
         """Everything that crosses the boundary in ONE turn for this batch
         shape, priced through the wire middleware stack.  Baselines report
-        their model pull/push instead (they have no cut).  Idempotent per
-        batch shape and free of session side effects — probing never
-        initialises training state or touches the meter."""
+        their model pull/push instead (no cut — the whole model is the
+        payload, priced through the same stack).  Idempotent per batch
+        shape and free of session side effects — probing never initialises
+        training state or touches the meter.
+
+        The bytes-accounting invariant is enforced where the payloads
+        actually exist: this report's shape probe routes through
+        `core.split.record`, which compares the `bytes_fn` claim against
+        the packed pytree's actual nbytes at every crossing and raises
+        `repro.api.wire.WireAccountingError` on drift — so a report over
+        a physical stack cannot return drifted numbers.  Each record
+        carries a `physical` flag naming which pricing applied."""
         state = self._state_for_probe()
         if not self.is_split:
-            pb = self.engine._param_bytes
+            pb = self.engine._wire_bytes
             if pb is None:
                 self.engine._probe(state, self._prep(batches))
-                pb = self.engine._param_bytes
-            return [{"name": "model_pull", "direction": "down", "bytes": pb},
-                    {"name": "model_push", "direction": "up", "bytes": pb}]
+                pb = self.engine._wire_bytes
+            phys = bool(self.wire_stack) and self.wire_stack.physical
+            return [{"name": "model_pull", "direction": "down",
+                     "bytes": pb, "physical": phys},
+                    {"name": "model_push", "direction": "up",
+                     "bytes": pb, "physical": phys}]
         cost = self.engine.turn_cost(state, self._prep(batches))
         return [{"name": w.name, "direction": w.direction,
                  "shape": tuple(w.shape), "dtype": str(w.dtype),
-                 "bytes": w.bytes} for w in cost.wires]
+                 "bytes": w.bytes, "physical": w.physical}
+                for w in cost.wires]
 
     def leakage_report(self, batch, *, client: int = 0) -> dict:
         """Distance correlation between the raw client input and what

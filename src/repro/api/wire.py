@@ -6,16 +6,32 @@ A `WireTransform` is a named pair of functions:
       moment it crosses the client/server boundary (forward activations
       AND backward cut-gradients), inside jit/scan/vmap;
   bytes_fn(shape, dtype, nbytes) -> nbytes'  — what the transform does to
-      the PHYSICAL wire-byte count of one payload (e.g. int8 quantization
-      ships 1 byte/element + fp32 row scales even though the in-graph
-      value stays fp32).
+      the PHYSICAL wire-byte count of one payload.
 
 Transforms compose left-to-right: `wire=[quantize_int8(), dp_noise(0.1)]`
 quantizes first, then adds noise; the metered bytes fold through the
 stack's `bytes_fn`s in the same order.  The hook point is
 `core.split.record` — every topology's grad function routes its boundary
-values through it, so middleware works for all eight `Plan` modes that
-have a wire without any per-topology code.
+values through it, so middleware works for all `Plan` modes that have a
+wire without any per-topology code.
+
+Fake vs physical int8:
+
+  quantize_int8()               — fake-quant: the in-graph value stays
+      fp32/bf16 carrying int8 information content; the metered bytes are
+      the `bytes_fn` CLAIM of what a real deployment would ship.
+  quantize_int8(physical=True)  — the in-graph wire value IS the packed
+      `(int8, fp32 row scales)` pytree, produced by the fused Pallas
+      kernels (`repro.kernels.wire_quant`); metered bytes are derived
+      from the actual payload dtypes and CHECKED against the `bytes_fn`
+      claim (`WireAccountingError` on drift).  Training matches the fake
+      path bitwise — `dequant(pack(x)) == _fake_quant_int8(x)`.
+
+Both flavours also cover the round-robin p2p weight handoff
+(`handoff=True`): the previously-trained client's weights are squeezed
+through the same per-row int8 wire before the next client adopts them,
+and with `physical=True` the fleet engine's `ppermute` ring carries the
+PACKED handoff — ~4x fewer bytes per device hop.
 """
 from __future__ import annotations
 
@@ -27,8 +43,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.privacy import distance_correlation
-from repro.core.wire_compress import _fake_quant_int8, wire_bytes
+from repro.core.wire_compress import (PackedInt8, _fake_quant_int8, as_dense,
+                                      pack_int8, pack_like, payload_nbytes,
+                                      wire_bytes)
 from repro.engine.topology import Topology
+
+
+class WireAccountingError(AssertionError):
+    """Metered wire bytes drifted from the physical payload's nbytes."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +60,8 @@ class WireTransform:
     apply: Callable          # (t, name, direction) -> t
     bytes_fn: Callable       # (shape, dtype, nbytes) -> nbytes
     probe: bool = False      # True: offline-probe-only (identity on wire)
+    physical: bool = False   # True: apply() emits the packed payload
+    handoff: bool = False    # True: also squeezes the p2p weight handoff
 
 
 def _identity_bytes(shape, dtype, nbytes):
@@ -45,19 +69,28 @@ def _identity_bytes(shape, dtype, nbytes):
 
 
 # ---------------------------------------------------------------------------
-# the three stock transforms
+# the stock transforms
 # ---------------------------------------------------------------------------
 
-def quantize_int8() -> WireTransform:
-    """Per-row symmetric int8 fake-quant of everything that crosses (see
-    `core.wire_compress`): the receiving side sees int8 information
-    content; the physical payload is 1 byte/element + one fp32 scale per
-    last-axis row — exactly `wire_compress.wire_bytes(quantized=True)`."""
+def quantize_int8(*, physical: bool = False) -> WireTransform:
+    """Per-row symmetric int8 quantization of everything that crosses
+    (see `core.wire_compress`), including the round-robin p2p weight
+    handoff.  physical=False fake-quants in-graph (fp32 values, int8
+    information content); physical=True routes through the fused Pallas
+    pack/dequant kernels and makes the packed `(int8, scales)` pytree
+    the in-graph wire value — the payload is 1 byte/element + one fp32
+    scale per last-axis row in BOTH cases, which is exactly what
+    `wire_compress.wire_bytes(quantized=True)` meters."""
+    if physical:
+        apply = lambda t, name, direction: pack_int8(as_dense(t))
+    else:
+        apply = lambda t, name, direction: _fake_quant_int8(as_dense(t))
     return WireTransform(
         name="quantize_int8",
-        apply=lambda t, name, direction: _fake_quant_int8(t),
+        apply=apply,
         bytes_fn=lambda shape, dtype, nbytes: wire_bytes(
-            shape, quantized=True, base_dtype=dtype))
+            shape, quantized=True, base_dtype=dtype),
+        physical=physical, handoff=True)
 
 
 def dp_noise(sigma: float, seed: int = 0) -> WireTransform:
@@ -65,18 +98,22 @@ def dp_noise(sigma: float, seed: int = 0) -> WireTransform:
     wire; sigma is in units of the payload's own scale).  jit-safe and
     deterministic: the key is derived from `seed`, the wire's static
     name, and the payload content, so each turn/payload draws different
-    noise without threading a PRNG key through the engine."""
+    noise without threading a PRNG key through the engine.  Downstream
+    of a physical quantizer the noised value is re-packed so the wire
+    stays int8."""
     base = jax.random.PRNGKey(seed)
 
     def apply(t, name, direction):
+        d = as_dense(t)
         k = jax.random.fold_in(base, zlib.crc32(name.encode()) & 0x7FFFFFFF)
         # wrapping integer sum of the raw bits: a cheap content hash that
         # cannot saturate (a float->int32 cast would clamp at INT32_MAX
         # for large payloads and reuse the same noise every turn)
-        bits = jax.lax.bitcast_convert_type(t.astype(jnp.float32),
+        bits = jax.lax.bitcast_convert_type(d.astype(jnp.float32),
                                             jnp.uint32)
         k = jax.random.fold_in(k, bits.sum(dtype=jnp.uint32))
-        return t + sigma * jax.random.normal(k, t.shape, t.dtype)
+        return pack_like(t, d + sigma * jax.random.normal(k, d.shape,
+                                                          d.dtype))
 
     return WireTransform(name="dp_noise", apply=apply,
                          bytes_fn=_identity_bytes)
@@ -97,6 +134,10 @@ def leakage_probe() -> WireTransform:
 # stack + tape
 # ---------------------------------------------------------------------------
 
+def _is_packed(x):
+    return isinstance(x, PackedInt8)
+
+
 class WireStack:
     """An ordered stack of `WireTransform`s, applied at every crossing."""
 
@@ -106,13 +147,23 @@ class WireStack:
     def __bool__(self):
         return bool(self.transforms)
 
+    @property
+    def physical(self) -> bool:
+        return any(tr.physical for tr in self.transforms)
+
+    @property
+    def has_handoff(self) -> bool:
+        return any(tr.handoff for tr in self.transforms)
+
     def apply(self, t, name: str, direction: str):
         for tr in self.transforms:
             t = tr.apply(t, name, direction)
         return t
 
     def wire_bytes(self, shape, dtype) -> int:
-        """Physical bytes of one payload after the whole stack."""
+        """Physical bytes of one payload after the whole stack — the
+        `bytes_fn` claim.  For physical stacks `record` checks this
+        against the actual packed payload's nbytes."""
         n = 1
         for s in shape:
             n *= s
@@ -121,17 +172,77 @@ class WireStack:
             nbytes = tr.bytes_fn(tuple(shape), dtype, nbytes)
         return int(nbytes)
 
+    # ---- p2p weight handoff ------------------------------------------------
+
+    def handoff_recv(self, tree):
+        """What the next client ADOPTS after the p2p handoff crossed the
+        wire: every leaf squeezed through the handoff transforms'
+        quantizer (dense in, dense out; identical math for the fake and
+        physical flavours, so engine/fleet stay bit-equal)."""
+        fns = [tr for tr in self.transforms if tr.handoff]
+        if not fns:
+            return tree
+
+        def leaf(a):
+            for tr in fns:
+                a = as_dense(tr.apply(a, "p2p_handoff", "p2p"))
+            return a
+
+        return jax.tree_util.tree_map(leaf, tree)
+
+    def handoff_pack(self, tree):
+        """The transport form of the handoff payload, quantized exactly
+        ONCE at the source: packed int8 leaves when the stack is
+        physical (this is what rides the fleet `ppermute` ring), the
+        fake-quantized dense tree otherwise.  `unpack(pack(x))` equals
+        `handoff_recv(x)` bitwise in both flavours — the receiver
+        adopts the arrived value as-is, never re-quantizing (the scale
+        re-derivation of a second pass rounds 1 ulp differently)."""
+        if not self.has_handoff:
+            return tree
+        if self.physical:
+            return jax.tree_util.tree_map(pack_int8, tree)
+        return self.handoff_recv(tree)
+
+    def handoff_unpack(self, tree):
+        return jax.tree_util.tree_map(as_dense, tree, is_leaf=_is_packed)
+
+    def handoff_bytes(self, tree) -> int:
+        """Wire bytes of one p2p handoff payload, priced through the
+        handoff transforms' bytes_fns (leafwise)."""
+        fns = [tr for tr in self.transforms if tr.handoff]
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(tree):
+            shape, dtype = tuple(leaf.shape), leaf.dtype
+            n = 1
+            for s in shape:
+                n *= s
+            nbytes = n * jnp.dtype(dtype).itemsize
+            for tr in fns:
+                nbytes = tr.bytes_fn(shape, dtype, nbytes)
+            total += int(nbytes)
+        return total
+
+    def tree_wire_bytes(self, tree) -> int:
+        """Full-stack wire bytes of a whole payload tree (leafwise) —
+        prices the baselines' model pull/push through the stack."""
+        return sum(self.wire_bytes(tuple(leaf.shape), leaf.dtype)
+                   for leaf in jax.tree_util.tree_leaves(tree))
+
+    # ---- probes ------------------------------------------------------------
+
     @property
     def wants_leakage_probe(self) -> bool:
         return any(tr.probe for tr in self.transforms)
 
     def pre_probe(self, t, name: str = "probe", direction: str = "up"):
         """Apply only the non-probe transforms (what the wire carries
-        when the offline leakage probe inspects it)."""
+        when the offline leakage probe inspects it), densified for the
+        dcor math."""
         for tr in self.transforms:
             if not tr.probe:
                 t = tr.apply(t, name, direction)
-        return t
+        return as_dense(t)
 
     def leakage(self, x_raw, wire_value) -> float:
         return float(distance_correlation(x_raw, wire_value))
@@ -149,8 +260,23 @@ class WireTape(list):
     def transform(self, t, name: str, direction: str):
         return self.stack.apply(t, name, direction)
 
-    def payload_bytes(self, shape, dtype) -> int:
-        return self.stack.wire_bytes(shape, dtype)
+    def payload_bytes(self, t) -> tuple:
+        """(bytes, physical) for the transformed wire value `t`.  When
+        the stack is physical, bytes are DERIVED from the actual payload
+        leaves and checked against the `bytes_fn` claim — the accounting
+        invariant (tested in tests/test_wire_quant.py, re-checked by
+        `Session.wire_report`)."""
+        predicted = self.stack.wire_bytes(tuple(t.shape), t.dtype)
+        if self.stack.physical:
+            actual = payload_nbytes(t)
+            if actual != predicted:
+                raise WireAccountingError(
+                    f"metered wire bytes drifted from the physical "
+                    f"payload: bytes_fn claims {predicted}, the packed "
+                    f"pytree holds {actual} (shape {tuple(t.shape)}, "
+                    f"dtype {t.dtype})")
+            return actual, True
+        return predicted, False
 
 
 def with_wire(topology: Topology, stack: WireStack) -> Topology:

@@ -35,7 +35,15 @@ def probe_wire_records(grads_fn, *args) -> list:
     appended to (the body traces once, not once per turn), so the compiled
     engine probes the wire shapes exactly once per topology + batch shape
     and then accumulates them analytically (`Meter.add_turn_cost`).  No
-    FLOP is spent: eval_shape only runs the abstract interpreter."""
+    FLOP is spent: eval_shape only runs the abstract interpreter.
+
+    Packed payloads probe like any other wire value: with a physical
+    transform in the stack, `core.split.record` prices each record from
+    the ACTUAL leaf dtypes of the packed pytree
+    (`wire_compress.payload_nbytes` — int8 q + fp32 row scales), checks
+    that against the stack's `bytes_fn` claim, and marks the record
+    `physical=True`; the `Meter`/`TurnCost` arithmetic downstream is
+    byte-representation-agnostic."""
     wires: list = []
     jax.eval_shape(lambda *a: grads_fn(*a, wires)[0], *args)
     return wires

@@ -16,6 +16,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.wire_compress import as_dense
+
 
 @dataclasses.dataclass(frozen=True)
 class SegModel:
@@ -59,10 +61,11 @@ class WireRecord:
     fp32) — `repro.api.wire` sets it from the transform stack.
     """
     name: str
-    shape: tuple
-    dtype: Any
+    shape: tuple         # LOGICAL payload shape (pre-pack)
+    dtype: Any           # LOGICAL dtype (what the dense value carries)
     direction: str       # "up" (client->server) | "down"
     payload_bytes: int | None = None
+    physical: bool = False   # True: bytes derived from a packed payload
 
     @property
     def bytes(self) -> int:
@@ -75,22 +78,24 @@ class WireRecord:
 
 
 def record(wires: list, name: str, t, direction: str):
-    """Record one boundary crossing and return the tensor AS THE OTHER
+    """Record one boundary crossing and return the value AS THE OTHER
     SIDE RECEIVES IT.
 
     `wires` is either a plain list (no middleware — `t` passes through
     unchanged, the original behaviour) or a `repro.api.wire.WireTape`,
     which applies the plan's `WireTransform` stack to the value in-graph
-    and prices the record at the stack's physical wire bytes.  Every
-    grad function in this module uses the RETURN value, so middleware
-    composes with all topologies for free."""
+    and prices the record at the stack's physical wire bytes.  With a
+    physical transform in the stack the returned value is the packed
+    `(int8, scales)` pytree itself — consumers go through `as_dense`.
+    Every grad function in this module uses the RETURN value, so
+    middleware composes with all topologies for free."""
     transform = getattr(wires, "transform", None)
-    payload = None
+    payload, physical = None, False
     if transform is not None:
         t = transform(t, name, direction)
-        payload = wires.payload_bytes(tuple(t.shape), t.dtype)
+        payload, physical = wires.payload_bytes(t)
     wires.append(WireRecord(name, tuple(t.shape), t.dtype, direction,
-                            payload))
+                            payload, physical))
     return t
 
 
@@ -121,10 +126,10 @@ def vanilla_split_grads(model: SegModel, cut: int, params_c, params_s,
         return loss_fn(logits, labels)
 
     (loss, ), vjp_s = jax.vjp(lambda ps, a: (server_loss(ps, a),),
-                              params_s, act)
+                              params_s, as_dense(act))
     g_server, g_act = vjp_s((jnp.ones(()),))
     g_act = record(wires, "cut_grad", g_act, "down")
-    (g_client,) = client_vjp(g_act)
+    (g_client,) = client_vjp(as_dense(g_act))
     return loss, g_client, g_server, wires
 
 
@@ -148,7 +153,8 @@ def u_shaped_grads(model: SegModel, cut1: int, cut2: int, params_head,
     act1 = record(wires, "cut_act_1", act1, "up")
 
     act2, vjp_mid = jax.vjp(
-        lambda p, a: _apply_mid(model, p, a, cut1, cut2), params_mid, act1)
+        lambda p, a: _apply_mid(model, p, a, cut1, cut2), params_mid,
+        as_dense(act1))
     act2 = record(wires, "cut_act_2", act2, "down")
 
     def tail_loss(p, a):
@@ -156,11 +162,11 @@ def u_shaped_grads(model: SegModel, cut1: int, cut2: int, params_head,
         return loss_fn(logits, labels)
 
     loss_val, (g_tail, g_act2) = jax.value_and_grad(
-        tail_loss, argnums=(0, 1))(params_tail, act2)
+        tail_loss, argnums=(0, 1))(params_tail, as_dense(act2))
     g_act2 = record(wires, "cut_grad_2", g_act2, "up")
-    g_mid, g_act1 = vjp_mid(g_act2)
+    g_mid, g_act1 = vjp_mid(as_dense(g_act2))
     g_act1 = record(wires, "cut_grad_1", g_act1, "down")
-    (g_head,) = vjp_head(g_act1)
+    (g_head,) = vjp_head(as_dense(g_act1))
     return loss_val, g_head, g_mid, g_tail, wires
 
 
@@ -204,11 +210,12 @@ def vertical_split_grads(branches: list[Branch], params_branches,
         return loss_fn(trunk_apply(pt, feat), labels)
 
     loss, (g_trunk, g_acts) = jax.value_and_grad(
-        server_loss, argnums=(0, 1))(params_trunk, acts)
+        server_loss, argnums=(0, 1))(params_trunk,
+                                     [as_dense(a) for a in acts])
     g_branches = []
     for i, (v, ga) in enumerate(zip(vjps, g_acts)):
         ga = record(wires, f"branch_{i}_grad", ga, "down")
-        (gb,) = v(ga)
+        (gb,) = v(as_dense(ga))
         g_branches.append(gb)
     return loss, g_branches, g_trunk, wires
 
@@ -229,7 +236,7 @@ def multihop_grads(model: SegModel, cuts: list[int], params_slabs, x, labels,
         lo, hi = bounds[i], bounds[i + 1]
         act, v = jax.vjp(
             lambda p, a, lo=lo, hi=hi: _apply_hop(model, p, a, lo, hi),
-            params_slabs[i], act)
+            params_slabs[i], as_dense(act))
         act = record(wires, f"hop_{i}_act", act, "up")
         vjps.append(v)
 
@@ -239,11 +246,11 @@ def multihop_grads(model: SegModel, cuts: list[int], params_slabs, x, labels,
         return loss_fn(_apply_hop(model, p, a, lo, hi), labels)
 
     loss, (g_last, g_act) = jax.value_and_grad(
-        final_loss, argnums=(0, 1))(params_slabs[-1], act)
+        final_loss, argnums=(0, 1))(params_slabs[-1], as_dense(act))
     grads = [g_last]
     for i in reversed(range(len(vjps))):
         g_act = record(wires, f"hop_{i}_grad", g_act, "down")
-        g_slab, g_act = vjps[i](g_act)
+        g_slab, g_act = vjps[i](as_dense(g_act))
         grads.append(g_slab)
     return loss, list(reversed(grads)), wires
 
@@ -269,13 +276,15 @@ def multitask_grads(branches: list[Branch], params_branches,
         vjps.append(v)
 
     feat_fn = lambda alist: jnp.concatenate(alist, axis=-1)
+    acts_dense = [as_dense(a) for a in acts]
     losses, g_heads = [], []
     g_acts_total = None
     for t, (head, ph, lf, lab) in enumerate(
             zip(heads, params_heads, loss_fns, labels_per_task)):
         def task_loss(p, alist):
             return lf(head(p, feat_fn(alist)), lab)
-        lv, (gh, gas) = jax.value_and_grad(task_loss, argnums=(0, 1))(ph, acts)
+        lv, (gh, gas) = jax.value_and_grad(task_loss, argnums=(0, 1))(
+            ph, acts_dense)
         losses.append(lv)
         g_heads.append(gh)
         g_acts_total = gas if g_acts_total is None else \
@@ -284,7 +293,7 @@ def multitask_grads(branches: list[Branch], params_branches,
     g_branches = []
     for i, (v, ga) in enumerate(zip(vjps, g_acts_total)):
         ga = record(wires, f"branch_{i}_grad", ga, "down")
-        (gb,) = v(ga)
+        (gb,) = v(as_dense(ga))
         g_branches.append(gb)
     return jnp.stack(losses), g_branches, g_heads, wires
 
@@ -310,19 +319,20 @@ def extended_vanilla_grads(branches: list[Branch], params_branches,
     def mid_fwd(pm, alist):
         return mid_apply(pm, jnp.concatenate(alist, axis=-1))
 
-    mid_out, vjp_mid = jax.vjp(mid_fwd, params_mid, acts)
+    mid_out, vjp_mid = jax.vjp(mid_fwd, params_mid,
+                               [as_dense(a) for a in acts])
     mid_out = record(wires, "mid_act", mid_out, "up")
 
     def server_loss(pt, m):
         return loss_fn(trunk_apply(pt, m), labels)
 
     loss, (g_trunk, g_mid_out) = jax.value_and_grad(
-        server_loss, argnums=(0, 1))(params_trunk, mid_out)
+        server_loss, argnums=(0, 1))(params_trunk, as_dense(mid_out))
     g_mid_out = record(wires, "mid_grad", g_mid_out, "down")
-    g_mid, g_acts = vjp_mid(g_mid_out)
+    g_mid, g_acts = vjp_mid(as_dense(g_mid_out))
     g_branches = []
     for i, (v, ga) in enumerate(zip(vjps, g_acts)):
         ga = record(wires, f"branch_{i}_grad", ga, "down")
-        (gb,) = v(ga)
+        (gb,) = v(as_dense(ga))
         g_branches.append(gb)
     return loss, g_branches, g_mid, g_trunk, wires

@@ -1,12 +1,19 @@
 """Cut-layer wire compression (beyond-paper; the paper's §4 names neural
 compression of the wire as future work).
 
-`quantized_wire` is an int8 fake-quant identity placed AT THE CUT: the
-forward activation and the backward cut-gradient are both squeezed
-through per-row symmetric int8 (max-abs scaling).  In the distributed
-protocol this is exactly a 4× (fp32) / 2× (bf16) wire-byte reduction in
-BOTH directions; in-graph it is the faithful simulation (values that
-cross carry int8 information content).
+Two int8 paths share one quantization scheme (per-last-axis-row
+symmetric absmax):
+
+  * fake   — `quantized_wire` / `_fake_quant_int8`: an in-graph
+    quantize-dequantize identity.  The values crossing carry int8
+    information content but the tensors stay fp32/bf16 — the metered
+    bytes are a *claim* priced by `wire_bytes`, not the physical truth.
+  * physical — `pack_int8` emits the `PackedInt8` payload that IS the
+    wire value: an int8 tensor plus fp32 row scales, produced/consumed
+    by the fused Pallas kernels in `repro.kernels.wire_quant`.  Bytes
+    are derived from the actual leaf dtypes (`payload_nbytes`), and
+    `dequant(pack(x))` is BITWISE equal to `_fake_quant_int8(x)`, so
+    both paths train identically.
 
 Straight-through is NOT needed: the quantizer is applied to the VALUES
 crossing the wire, so the client backprops the *quantized* cut gradient,
@@ -14,14 +21,24 @@ exactly as the real protocol would.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any
+
 import jax
 import jax.numpy as jnp
 
 
 def _fake_quant_int8(x):
-    """Per-last-axis-row symmetric int8 quantize-dequantize."""
+    """Per-last-axis-row symmetric int8 quantize-dequantize.  The scale
+    is absmax * fl32(1/127) — a constant MULTIPLY, not a divide, so the
+    Pallas kernels (`kernels.wire_quant`), the jnp oracles and this
+    fake-quant all round identically (bitwise).  Scalar (0-d) leaves —
+    possible in the param trees the handoff/baseline wires quantize —
+    are treated as one-element rows."""
+    if jnp.ndim(x) == 0:
+        return _fake_quant_int8(x[None])[0]
     xf = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) * (1.0 / 127.0)
     scale = jnp.maximum(scale, 1e-12)
     q = jnp.clip(jnp.round(xf / scale), -127, 127)
     return (q * scale).astype(x.dtype)
@@ -49,6 +66,97 @@ def wire_bytes(shape, *, quantized: bool, base_dtype=jnp.bfloat16) -> int:
     for s in shape:
         n *= s
     if quantized:
-        rows = n // shape[-1]
+        rows = n // shape[-1] if shape else 1
         return n * 1 + rows * 4          # int8 payload + fp32 row scales
     return n * jnp.dtype(base_dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# the physical payload
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedInt8:
+    """The packed int8 wire payload: `q` (..., K) int8 + `scale` (..., 1)
+    fp32 row scales.  A pytree node, so it rides scan carries, vmap axes
+    and `ppermute` rings like any tensor — but physically moves ~4x
+    fewer bytes than the fp32 value it encodes.  `shape`/`dtype` are the
+    LOGICAL (pre-pack) view so `WireRecord`s stay comparable across the
+    fake and physical paths."""
+    q: Any
+    scale: Any
+    orig_dtype: Any = jnp.float32
+
+    def tree_flatten(self):
+        return (self.q, self.scale), jnp.dtype(self.orig_dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    @property
+    def shape(self):
+        return tuple(self.q.shape)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.orig_dtype)
+
+
+def pack_int8(x) -> PackedInt8:
+    """Quantize + pack one dense payload through the fused kernel."""
+    from repro.kernels.ops import wire_quantize
+    q, scale = wire_quantize(x)
+    return PackedInt8(q, scale, jnp.dtype(x.dtype))
+
+
+def unpack_int8(p: PackedInt8):
+    from repro.kernels.ops import wire_dequantize
+    return wire_dequantize(p.q, p.scale, p.orig_dtype)
+
+
+def as_dense(t):
+    """The dense view of a wire value: dequantize packed payloads,
+    pass dense tensors through untouched (identity for the fake path)."""
+    return unpack_int8(t) if isinstance(t, PackedInt8) else t
+
+
+def pack_like(template, x):
+    """Re-pack `x` iff `template` was packed — keeps a transform stack's
+    physical-ness through value-rewriting middleware (e.g. dp_noise)."""
+    return pack_int8(x) if isinstance(template, PackedInt8) else x
+
+
+def is_packed_tree(tree) -> bool:
+    return any(isinstance(leaf, PackedInt8)
+               for leaf in jax.tree_util.tree_leaves(
+                   tree, is_leaf=lambda x: isinstance(x, PackedInt8)))
+
+
+def payload_nbytes(t) -> int:
+    """Physical bytes of one wire value, derived from the ACTUAL leaf
+    shapes and dtypes — int8 q + fp32 scales for packed payloads, the
+    dense itemsize otherwise.  This is the ground truth the metered
+    bytes must match (see `repro.api.wire.WireTape.payload_bytes`)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(t):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def splitcat_linear_packed(parts: list, w, b=None, out_dtype=None):
+    """Server entry layer over a list of wire payloads: packed parts go
+    through the fused dequant+concat+matmul q8 kernel (the fp32
+    activation never materializes); dense parts fall back to the dense
+    splitcat kernel.  Mixed lists are densified first."""
+    from repro.kernels import ops
+    if parts and all(isinstance(p, PackedInt8) for p in parts):
+        dt = out_dtype or parts[0].orig_dtype
+        return ops.splitcat_linear_q8([p.q for p in parts],
+                                      [p.scale for p in parts], w, b,
+                                      out_dtype=dt)
+    return ops.splitcat_linear([as_dense(p) for p in parts], w, b)

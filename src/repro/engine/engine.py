@@ -22,7 +22,7 @@ bit-for-bit (tests/test_engine.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -66,13 +66,23 @@ def stack_batches(batches: list[dict]) -> dict:
     return {k: jnp.stack([b[k] for b in batches]) for k in batches[0]}
 
 
+def copy_tree(tree):
+    """Leafwise device copy — gives a state tree its OWN buffers.  The
+    engines donate their input state to XLA (buffer reuse instead of a
+    per-round copy), so a state built from another tree's leaves must
+    not share them."""
+    return jax.tree_util.tree_map(jnp.copy, tree)
+
+
 def stack_state(state: dict, n: int) -> dict:
     """List-of-trees trainer state -> stacked engine state.  The single
-    canonical copy (core.protocol re-exports it for back-compat)."""
+    canonical copy (core.protocol re-exports it for back-compat).  The
+    non-stacked leaves are COPIED, not shared: the compiled round
+    donates its input buffers."""
     return {"clients": stack_trees(state["clients"]),
-            "server": state["server"],
+            "server": copy_tree(state["server"]),
             "opt_c": stack_trees(state["opt_c"]),
-            "opt_s": state["opt_s"],
+            "opt_s": copy_tree(state["opt_s"]),
             "last_trained": jnp.asarray(state["last_trained"], jnp.int32)}
 
 
@@ -98,6 +108,7 @@ class RoundEngine:
     n_clients: int
     schedule: str = "round_robin"       # "round_robin" | "parallel"
     sync: str = "p2p"                   # "p2p" | "none"  (round_robin only)
+    wire_stack: Any = None              # repro.api.wire.WireStack | None
 
     def __post_init__(self):
         if self.schedule not in SCHEDULES:
@@ -108,7 +119,17 @@ class RoundEngine:
         self.meter = Meter(self.n_clients)
         self._client_param_bytes = 0
         self._turn_costs: dict = {}     # batch-shape key -> TurnCost
-        self._round_jit = jax.jit(self._round)
+        # p2p handoff middleware: transforms flagged handoff=True squeeze
+        # the previously-trained client's weights through the wire before
+        # the next client adopts them (identical math for the fake and
+        # physical quantizers — the fleet engine additionally moves the
+        # PACKED form over its ppermute ring)
+        stack = self.wire_stack
+        self._wire_handoff = bool(stack is not None
+                                  and getattr(stack, "has_handoff", False))
+        # the incoming train-state is donated: XLA reuses its buffers for
+        # the round's output instead of allocating a full copy per round
+        self._round_jit = jax.jit(self._round, donate_argnums=(0,))
 
     # ---- state ------------------------------------------------------------
 
@@ -162,8 +183,12 @@ class RoundEngine:
             clients, opt_c, server, opt_s, last = carry
             pc = tree_index(clients, ci)
             if sync == "p2p" and n > 1:
-                # pull the last trained client's weights (p2p handoff)
+                # pull the last trained client's weights (p2p handoff);
+                # with wire middleware the payload crosses the same
+                # quantized wire the cut activations do
                 prev = tree_index(clients, jnp.maximum(last, 0))
+                if self._wire_handoff:
+                    prev = self.wire_stack.handoff_recv(prev)
                 take = (last >= 0) & (last != ci)
                 pc = jax.tree_util.tree_map(
                     lambda own, pv: jnp.where(take, pv, own), pc, prev)
@@ -240,9 +265,14 @@ class RoundEngine:
             if not self._client_param_bytes:
                 self._client_param_bytes = (
                     bytes_of_tree(state["clients"]) // self.n_clients)
+            # the p2p handoff is wire traffic too: price it through the
+            # stack's handoff transforms (int8 + row scales under
+            # quantize_int8) instead of the dense param bytes
+            sync_bytes = (self.wire_stack.handoff_bytes(pc)
+                          if self._wire_handoff
+                          else self._client_param_bytes)
             self._turn_costs[key] = TurnCost(
-                wires=tuple(wires), flops=flops,
-                sync_bytes=self._client_param_bytes)
+                wires=tuple(wires), flops=flops, sync_bytes=sync_bytes)
         return self._turn_costs[key]
 
     def _account_round(self, state, batches, *, first_round: bool):

@@ -51,8 +51,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.engine.engine import (RoundEngine, apply_updates, tree_index,
                                  tree_update)
 from repro.launch.mesh import make_fleet_mesh
-from repro.nn.dist import (shard_map, tree_ppermute, tree_psum,
-                           tree_replicate_from, tree_where)
+from repro.nn.dist import (shard_map_norep as shard_map, tree_ppermute,
+                           tree_psum, tree_replicate_from, tree_where)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,12 +225,20 @@ class FleetRoundEngine(FleetMeshMixin, RoundEngine):
         real one in phase d (every other shard's run is masked out);
         the carry — server params/opt state, the global last-trained
         index, and the last-trained client's post-update weights (the
-        p2p handoff payload) — rides the device ring via ppermute.  The
-        final carry is replicated off shard D-1 with one masked psum."""
+        p2p handoff payload) — rides the device ring via ppermute.  With
+        a physical wire stack the handoff rides PACKED (int8 + fp32 row
+        scales): every ring hop moves ~4x fewer bytes, and the unpacked
+        value the next client adopts is bit-equal to the single-device
+        engine's quantized handoff.  The final carry is replicated off
+        shard D-1 with one masked psum."""
         ax, n_local = self._ax, self._n_local
         n_shards, n = self._n_shards, self.n_clients
         me = lax.axis_index(ax)
         sync = self.sync == "p2p" and n > 1
+        stack = self.wire_stack if self._wire_handoff else None
+        pack = stack.handoff_pack if stack is not None else (lambda t: t)
+        unpack = stack.handoff_unpack if stack is not None else (lambda t: t)
+        recv = stack.handoff_recv if stack is not None else (lambda t: t)
 
         def local_prev(clients, last):
             """The previously-trained client's weights when it lives in
@@ -248,7 +256,13 @@ class FleetRoundEngine(FleetMeshMixin, RoundEngine):
                 pc = tree_index(clients, li)
                 if sync:
                     here, prev_here = local_prev(clients, last)
-                    prev = tree_where(here, prev_here, handoff)
+                    # ring payloads were quantized at the SOURCE
+                    # (handoff_pack), so the arrived value is adopted
+                    # as-is; only the same-shard pull crosses the wire
+                    # here — each handoff is quantized exactly once,
+                    # bit-equal to the single-device scan
+                    prev = tree_where(here, recv(prev_here),
+                                      unpack(handoff))
                     take = (last >= 0) & (last != gi)
                     pc = tree_where(take, prev, pc)
                 loss, g_c, g_s = self.topology.turn_grads(
@@ -261,7 +275,7 @@ class FleetRoundEngine(FleetMeshMixin, RoundEngine):
                 server = apply_updates(server, ups_s)
                 return ((tree_update(clients, li, pc),
                          tree_update(opt_c, li, oc),
-                         server, opt_s, gi, pc), loss)
+                         server, opt_s, gi, pack(pc)), loss)
 
             init = (clients, opt_c, server, opt_s, last, handoff)
             return lax.scan(body, init,
@@ -269,9 +283,11 @@ class FleetRoundEngine(FleetMeshMixin, RoundEngine):
 
         # the handoff entering phase 0: the globally last-trained
         # client's weights, replicated off whichever shard owns them
-        # (zeros before the first-ever turn — masked out by `take`)
+        # (zeros before the first-ever turn — masked out by `take`).
+        # Packed BEFORE the masked-psum replication, so even the phase-0
+        # broadcast moves the int8 form when the stack is physical.
         here, mine = local_prev(clients, last)
-        handoff = tree_replicate_from(mine, ax, here & (last >= 0))
+        handoff = tree_replicate_from(pack(mine), ax, here & (last >= 0))
 
         perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
         carry = (server, opt_s, last, handoff)

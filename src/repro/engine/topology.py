@@ -104,10 +104,10 @@ def vanilla_fns(init_full: Callable, split: Callable, client_apply: Callable,
         act = sp.record(wires, "cut_act", act, "up")
         (loss,), vjp_s = jax.vjp(
             lambda p, a: (loss_fn(server_apply(p, a), batch["labels"]),),
-            ps, act)
+            ps, sp.as_dense(act))
         g_s, g_act = vjp_s((jnp.ones(()),))
         g_act = sp.record(wires, "cut_grad", g_act, "down")
-        (g_c,) = vjp_c(g_act)
+        (g_c,) = vjp_c(sp.as_dense(g_act))
         return loss, g_c, g_s
 
     def evaluate(pc, ps, batch):

@@ -1,9 +1,20 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers for the Pallas kernels + the dispatch switch.
 
-On this CPU container kernels execute in interpret mode (the TPU lowering
-path is identical modulo `interpret=`); `KERNEL_INTERPRET` flips the
-default.  GQA head expansion for flash attention happens here, not in the
-kernel (the kernel requires equal head counts).
+Kernel dispatch is a three-way mode, resolved per call:
+
+    pallas — real Pallas lowering (TPU/GPU); auto-falls back to interp
+             when only CPU devices are visible, so requesting it never
+             crashes a CPU lane;
+    interp — `pallas_call(interpret=True)`: the SAME kernel bodies
+             executed through the Pallas interpreter (what CPU/CI runs —
+             the kernel code path stays exercised without an accelerator);
+    ref    — the pure-jnp oracles in `kernels.ref` (debugging baseline).
+
+Precedence: an explicit `interpret=` argument > the `REPRO_KERNELS`
+env var (pallas|interp|ref) > the legacy `KERNEL_INTERPRET` flag
+(0 = pallas) > auto (pallas on TPU/GPU, interp on CPU).  GQA head
+expansion for flash attention happens here, not in the kernel (the
+kernel requires equal head counts).
 """
 from __future__ import annotations
 
@@ -13,47 +24,173 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
-from repro.kernels.splitcat_linear import splitcat_linear_pallas
+from repro.kernels.splitcat_linear import (splitcat_linear_pallas,
+                                           splitcat_linear_q8_pallas)
 from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.wire_quant import (wire_dequant_pallas, wire_quant_pallas,
+                                      wire_roundtrip)
 
+KERNEL_MODES = ("pallas", "interp", "ref")
+
+# legacy flag kept for back-compat: KERNEL_INTERPRET=1 (the old default)
+# pins interpret mode, =0 asks for the real lowering.  `kernel_mode`
+# re-reads the env per call; this import-time snapshot is only kept for
+# back-compat with code that imported the old constant.
 INTERPRET = os.environ.get("KERNEL_INTERPRET", "1") == "1"
 
 
+def _has_accelerator() -> bool:
+    try:
+        return any(d.platform in ("tpu", "gpu", "cuda", "rocm")
+                   for d in jax.devices())
+    except RuntimeError:
+        return False
+
+
+def kernel_mode() -> str:
+    """Resolve the ambient kernel dispatch mode (see module docstring).
+    Read per call so tests/nightly lanes can flip `REPRO_KERNELS`
+    without reimporting."""
+    mode = os.environ.get("REPRO_KERNELS", "").strip().lower()
+    if mode:
+        if mode not in KERNEL_MODES:
+            raise ValueError(
+                f"REPRO_KERNELS={mode!r}: must be one of {KERNEL_MODES}")
+        if mode == "pallas" and not _has_accelerator():
+            return "interp"         # auto-fallback: CPU lanes still run
+        return mode                 # the kernel bodies via the interpreter
+    if "KERNEL_INTERPRET" in os.environ:
+        # read the VALUE per call too — a flag flipped after import
+        # must not dispatch against the import-time snapshot
+        return ("interp" if os.environ["KERNEL_INTERPRET"] == "1"
+                else "pallas")
+    return "pallas" if _has_accelerator() else "interp"
+
+
+def _resolve(interpret: bool | None) -> str:
+    if interpret is not None:
+        return "interp" if interpret else "pallas"
+    return kernel_mode()
+
+
+# ---------------------------------------------------------------------------
+# jit'd pallas entry points (static interpret flag)
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def _rmsnorm_jit(x, scale, *, eps, interpret):
+    return rmsnorm_pallas(x, scale, eps=eps, interpret=interpret)
+
+
 def rmsnorm(x, scale, *, eps: float = 1e-6, interpret: bool | None = None):
-    return rmsnorm_pallas(x, scale, eps=eps,
-                          interpret=INTERPRET if interpret is None
-                          else interpret)
+    mode = _resolve(interpret)
+    if mode == "ref":
+        return ref.rmsnorm_ref(x, scale, eps=eps)
+    return _rmsnorm_jit(x, scale, eps=eps, interpret=(mode == "interp"))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def _splitcat_jit(parts, w, b, *, interpret):
+    return splitcat_linear_pallas(list(parts), w, b, interpret=interpret)
+
+
 def splitcat_linear(parts, w, b=None, *, interpret: bool | None = None):
-    return splitcat_linear_pallas(list(parts), w, b,
-                                  interpret=INTERPRET if interpret is None
-                                  else interpret)
+    mode = _resolve(interpret)
+    if mode == "ref":
+        return ref.splitcat_linear_ref(list(parts), w, b)
+    return _splitcat_jit(list(parts), w, b, interpret=(mode == "interp"))
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def _splitcat_q8_jit(qs, scales, w, b, *, out_dtype, interpret):
+    return splitcat_linear_q8_pallas(list(qs), list(scales), w, b,
+                                     out_dtype=out_dtype,
+                                     interpret=interpret)
+
+
+def splitcat_linear_q8(qs, scales, w, b=None, *, out_dtype=jnp.float32,
+                       interpret: bool | None = None):
+    """Fused dequant+concat+matmul over packed int8 modality payloads —
+    the server entry layer consuming the physical wire directly."""
+    mode = _resolve(interpret)
+    if mode == "ref":
+        return ref.splitcat_linear_q8_ref(list(qs), list(scales), w, b,
+                                          out_dtype=out_dtype)
+    return _splitcat_q8_jit(list(qs), list(scales), w, b,
+                            out_dtype=jnp.dtype(out_dtype),
+                            interpret=(mode == "interp"))
+
+
+def wire_quantize(x, *, interpret: bool | None = None):
+    """Fused per-row absmax quantize + int8 pack: x -> (q, row scales).
+    Scalar (0-d) payloads — possible in the param trees the handoff and
+    baseline wires quantize — are packed as one-element rows and keep
+    their logical () shape."""
+    if jnp.ndim(x) == 0:
+        q, s = wire_quantize(x[None], interpret=interpret)
+        return q[0], s[0]
+    mode = _resolve(interpret)
+    if mode == "ref":
+        return ref.wire_quant_ref(x)
+    return wire_quant_pallas(x, interpret=(mode == "interp"))
+
+
+def wire_dequantize(q, scale, dtype=jnp.float32, *,
+                    interpret: bool | None = None):
+    if jnp.ndim(q) == 0:
+        return wire_dequantize(q[None], scale[None], dtype,
+                               interpret=interpret)[0]
+    mode = _resolve(interpret)
+    if mode == "ref":
+        return ref.wire_dequant_ref(q, scale, dtype)
+    return wire_dequant_pallas(q, scale, dtype, interpret=(mode == "interp"))
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_kv", "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True,
-                    window: int | None = None, block_q: int = 128,
-                    block_kv: int = 128, interpret: bool | None = None):
-    """q: (B,S,H,D); k,v: (B,S,K,D) with H % K == 0 (GQA expanded here)."""
+def _flash_jit(q, k, v, *, causal, window, block_q, block_kv, interpret):
     H, K = q.shape[2], k.shape[2]
     if K != H:
         k = jnp.repeat(k, H // K, axis=2)
         v = jnp.repeat(v, H // K, axis=2)
     return flash_attention_pallas(
         q, k, v, causal=causal, window=window, block_q=block_q,
-        block_kv=block_kv,
-        interpret=INTERPRET if interpret is None else interpret)
+        block_kv=block_kv, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool | None = None):
+    """q: (B,S,H,D); k,v: (B,S,K,D) with H % K == 0 (GQA expanded here)."""
+    mode = _resolve(interpret)
+    if mode == "ref":
+        H, K = q.shape[2], k.shape[2]
+        if K != H:
+            k = jnp.repeat(k, H // K, axis=2)
+            v = jnp.repeat(v, H // K, axis=2)
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_jit(q, k, v, causal=causal, window=window, block_q=block_q,
+                      block_kv=block_kv, interpret=(mode == "interp"))
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_jit(x, dt, A, Bm, Cm, *, chunk, interpret):
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                           interpret=interpret)
+
+
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64,
              interpret: bool | None = None):
-    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk,
-                           interpret=INTERPRET if interpret is None
-                           else interpret)
+    mode = _resolve(interpret)
+    if mode == "ref":
+        return ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    return _ssd_jit(x, dt, A, Bm, Cm, chunk=chunk,
+                    interpret=(mode == "interp"))
+
+
+__all__ = ["KERNEL_MODES", "kernel_mode", "rmsnorm", "splitcat_linear",
+           "splitcat_linear_q8", "wire_quantize", "wire_dequantize",
+           "wire_roundtrip", "flash_attention", "ssd_scan"]

@@ -23,6 +23,31 @@ def splitcat_linear_ref(parts: list, w, b=None):
     return y.astype(parts[0].dtype)
 
 
+def wire_quant_ref(x):
+    """Per-last-axis-row symmetric int8 quantize+pack: the physical wire
+    payload is `(q int8, fp32 row scales)`.  dequant(quant(x)) is BITWISE
+    the fake-quant `core.wire_compress._fake_quant_int8(x)` — rounded
+    values in [-127, 127] are exact in both int8 and fp32."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) * (1.0 / 127.0)
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def wire_dequant_ref(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def splitcat_linear_q8_ref(qs: list, scales: list, w, b=None,
+                           out_dtype=jnp.float32):
+    """Dequant + concat + matmul over packed int8 modality payloads —
+    oracle for the fused q8 splitcat kernel."""
+    parts = [wire_dequant_ref(q, s) for q, s in zip(qs, scales)]
+    y = splitcat_linear_ref(parts, w, b)
+    return y.astype(out_dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         window: int | None = None, scale: float | None = None):
     """q,k,v: (B, S, H, D) (equal head counts).  fp32 softmax."""

@@ -38,6 +38,85 @@ def _splitcat_kernel(*refs, n_parts: int, has_bias: bool):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def _splitcat_q8_kernel(*refs, n_parts: int, has_bias: bool):
+    # refs: q_0..q_{n-1}, s_0..s_{n-1}, w_0..w_{n-1}, [b], o_ref
+    qs = refs[:n_parts]
+    ss = refs[n_parts:2 * n_parts]
+    ws = refs[2 * n_parts:3 * n_parts]
+    b_ref = refs[3 * n_parts] if has_bias else None
+    o_ref = refs[-1]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for q_ref, s_ref, w_ref in zip(qs, ss, ws):
+        # per-row scale factors out of the row-slab matmul:
+        #   (q * s_row) @ W == s_row * (q @ W)
+        # so the fp32 activation is never materialized — the int8 slab
+        # feeds the MXU and the scale folds into the accumulator.
+        acc += jnp.dot(q_ref[...].astype(jnp.float32),
+                       w_ref[...].astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * s_ref[...]
+    if b_ref is not None:
+        acc += b_ref[...].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def splitcat_linear_q8_pallas(qs: list, scales: list, w, b=None, *,
+                              out_dtype=jnp.float32, block_r: int = 128,
+                              block_c: int = 128, interpret: bool = False):
+    """Fused dequant + concat + matmul over packed int8 payloads.
+
+    qs[i]: (..., K_i) int8; scales[i]: (..., 1) fp32 row scales;
+    w: (sum K_i, C).  The server's entry layer consumes the wire's
+    packed form directly — the dequantized fp32 activation exists only
+    tile-at-a-time inside VMEM, never in HBM."""
+    lead = qs[0].shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    qs2 = [q.reshape(rows, q.shape[-1]) for q in qs]
+    ss2 = [s.reshape(rows, 1) for s in scales]
+    block_r = min(block_r, rows)
+    pad_r = (-rows) % block_r
+    if pad_r:
+        qs2 = [jnp.pad(q, ((0, pad_r), (0, 0))) for q in qs2]
+        ss2 = [jnp.pad(s, ((0, pad_r), (0, 0))) for s in ss2]
+    R = rows + pad_r
+    C = w.shape[-1]
+    bc = min(block_c, C)
+    assert C % bc == 0, f"d_out {C} % {bc}"
+
+    ws, off = [], 0
+    for q in qs2:
+        k_i = q.shape[-1]
+        ws.append(jax.lax.slice_in_dim(w, off, off + k_i, axis=0))
+        off += k_i
+    assert off == w.shape[0], f"sum K_i {off} != w rows {w.shape[0]}"
+
+    n = len(qs2)
+    in_specs = [pl.BlockSpec((block_r, q.shape[-1]), lambda i, j: (i, 0))
+                for q in qs2]
+    in_specs += [pl.BlockSpec((block_r, 1), lambda i, j: (i, 0))
+                 for _ in ss2]
+    in_specs += [pl.BlockSpec((wi.shape[0], bc), lambda i, j: (0, j))
+                 for wi in ws]
+    args = qs2 + ss2 + ws
+    if b is not None:
+        in_specs.append(pl.BlockSpec((1, bc), lambda i, j: (0, j)))
+        args.append(b.reshape(1, C))
+
+    out = pl.pallas_call(
+        functools.partial(_splitcat_q8_kernel, n_parts=n,
+                          has_bias=b is not None),
+        grid=(R // block_r, C // bc),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_r, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.dtype(out_dtype)),
+        interpret=interpret,
+    )(*args)
+    if pad_r:
+        out = out[:rows]
+    return out.reshape(*lead, C)
+
+
 def splitcat_linear_pallas(parts: list, w, b=None, *, block_r: int = 128,
                            block_c: int = 128, interpret: bool = False):
     """parts: list of (..., K_i); w: (sum K_i, C) -> (..., C)."""

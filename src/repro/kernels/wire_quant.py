@@ -1,0 +1,148 @@
+"""Fused wire-quantization kernels — the cut payload's physical form.
+
+The split-learning wire carries two payloads per turn (the cut
+activation up, the cut gradient down).  `wire_quant_pallas` fuses the
+per-row absmax reduction, the scale computation, the round/clip and the
+int8 cast into ONE kernel pass over the payload, emitting the packed
+`(int8 values, fp32 row scales)` pair that physically crosses the wire;
+`wire_dequant_pallas` is the receiving side.  Per-row means per
+last-axis row — the same symmetric scheme `core.wire_compress`'s
+fake-quant simulates, so `dequant(quant(x))` is BITWISE equal to
+`_fake_quant_int8(x)` and the physical path trains identically to the
+fake one (tests/test_wire_quant.py).
+
+Grid: (rows / block_r,) over the payload reshaped to (rows, K).  Each
+step holds one (block_r, K) slab in VMEM, reduces along the lane axis,
+and writes the int8 slab plus a (block_r, 1) scale column.  Cut
+activations are narrow (K = channels/d_model), so even block_r=256 at
+K=4096 fp32 is 4 MB — comfortably inside the ~16 MB VMEM.  On this CPU
+container the kernels execute in interpret mode (`kernels.ops` mode
+dispatch); the TPU lowering is identical modulo `interpret=`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+# multiply by the f32-rounded reciprocal instead of dividing: the Pallas
+# interpreter and XLA lower a constant division differently (1-ulp scale
+# drift), a constant multiply identically — keeps quant bitwise equal
+# across pallas/interp/ref and the fake-quant path
+_INV127 = 1.0 / 127.0
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) * _INV127
+    scale = jnp.maximum(scale, _EPS)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = (q_ref[...].astype(jnp.float32)
+                  * s_ref[...]).astype(o_ref.dtype)
+
+
+def _rows_2d(x):
+    """(..., K) -> (rows, K) plus the lead shape to restore.  0-d
+    payloads are handled upstream (`kernels.ops.wire_quantize` packs
+    them as one-element rows)."""
+    lead, k = x.shape[:-1], x.shape[-1]
+    return x.reshape(-1, k), lead
+
+
+def wire_quant_pallas(x, *, block_r: int | None = None,
+                      interpret: bool = False):
+    """x: (..., K) -> (q int8 (..., K), scales fp32 (..., 1)).
+
+    block_r defaults to 256 rows on the real lowering (VMEM-sized MXU
+    tiles) but to the WHOLE payload under interpret mode — the
+    interpreter pays ~300us per grid step, so CPU/CI lanes run the
+    kernel body once instead of rows/256 times."""
+    x2, lead = _rows_2d(x)
+    rows, k = x2.shape
+    if block_r is None:
+        block_r = rows if interpret else 256
+    block_r = min(block_r, rows)
+    pad = (-rows) % block_r
+    if pad:                     # zero rows quantize to (0, eps) — sliced off
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    r_padded = rows + pad
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(r_padded // block_r,),
+        in_specs=[pl.BlockSpec((block_r, k), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+                   pl.BlockSpec((block_r, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((r_padded, k), jnp.int8),
+                   jax.ShapeDtypeStruct((r_padded, 1), jnp.float32)],
+        interpret=interpret,
+    )(x2)
+    if pad:
+        q, s = q[:rows], s[:rows]
+    return q.reshape(*lead, k), s.reshape(*lead, 1)
+
+
+def wire_dequant_pallas(q, scale, dtype=jnp.float32, *,
+                        block_r: int | None = None,
+                        interpret: bool = False):
+    """(q int8 (..., K), scales (..., 1)) -> dense (..., K) in `dtype`."""
+    q2, lead = _rows_2d(q)
+    s2 = scale.reshape(q2.shape[0], 1)
+    rows, k = q2.shape
+    if block_r is None:
+        block_r = rows if interpret else 256
+    block_r = min(block_r, rows)
+    pad = (-rows) % block_r
+    if pad:
+        q2 = jnp.pad(q2, ((0, pad), (0, 0)))
+        s2 = jnp.pad(s2, ((0, pad), (0, 0)))
+    r_padded = rows + pad
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(r_padded // block_r,),
+        in_specs=[pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+                  pl.BlockSpec((block_r, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_padded, k), jnp.dtype(dtype)),
+        interpret=interpret,
+    )(q2, s2)
+    if pad:
+        out = out[:rows]
+    return out.reshape(*lead, k)
+
+
+# ---------------------------------------------------------------------------
+# differentiable round-trip (the in-graph wire op)
+# ---------------------------------------------------------------------------
+# The mode-dispatched public entry points (pallas | interp | ref) live in
+# `kernels.ops.wire_quantize` / `wire_dequantize` — ONE dispatcher, shared
+# with every other kernel; this module holds only the pallas lowerings.
+
+def _roundtrip_impl(x):
+    from repro.kernels.ops import wire_dequantize, wire_quantize
+    q, s = wire_quantize(x)
+    return wire_dequantize(q, s, x.dtype)
+
+
+@jax.custom_vjp
+def wire_roundtrip(x):
+    """dequant(quant(x)) with the wire's custom backward: the cotangent
+    is itself squeezed through the int8 wire, exactly like
+    `core.wire_compress.quantized_wire` — the client backprops the
+    QUANTIZED cut gradient, as the physical protocol would."""
+    return _roundtrip_impl(x)
+
+
+def _rt_fwd(x):
+    return _roundtrip_impl(x), None
+
+
+def _rt_bwd(_, g):
+    return (_roundtrip_impl(g),)
+
+
+wire_roundtrip.defvjp(_rt_fwd, _rt_bwd)

@@ -55,12 +55,16 @@ def make_batch_fn(cfg, batch, seq):
 
 
 def parse_wire(spec: str):
-    """'quantize_int8,dp_noise:0.05,leakage_probe' -> transform stack."""
+    """'quantize_int8,dp_noise:0.05,leakage_probe' -> transform stack.
+    `quantize_int8:physical` routes through the fused Pallas pack/dequant
+    kernels — the in-graph wire value is the packed int8 payload."""
     out = []
     for tok in filter(None, spec.split(",")):
         name, _, arg = tok.partition(":")
         if name == "quantize_int8":
-            out.append(quantize_int8())
+            if arg not in ("", "physical", "fake"):
+                raise SystemExit(f"quantize_int8:{arg}? (physical|fake)")
+            out.append(quantize_int8(physical=arg == "physical"))
         elif name == "dp_noise":
             out.append(dp_noise(float(arg or 0.05)))
         elif name == "leakage_probe":
@@ -120,8 +124,8 @@ def main():
                     choices=["vanilla", "u_shaped", "vertical", "multihop"],
                     default="vanilla")
     ap.add_argument("--wire", default="",
-                    help="comma list: quantize_int8,dp_noise:SIGMA,"
-                         "leakage_probe")
+                    help="comma list: quantize_int8[:physical],"
+                         "dp_noise:SIGMA,leakage_probe")
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--fleet", action="store_true",
                     help="shard the client axis over a device mesh "

@@ -327,10 +327,30 @@ def test_wire_report_on_baseline_is_side_effect_free():
     assert sess.wire_report(shards) == rep
 
 
-def test_wire_on_baseline_mode_rejected():
-    with pytest.raises(ValueError, match="no cut wire"):
-        Plan(mode="fedavg", model=make_model(),
-             wire=(quantize_int8(),)).compile()
+def test_wire_on_baseline_quantizes_model_payloads():
+    """Baselines have no cut, but their wire (model pull/push) goes
+    through the same transform stack: quantize_int8 shrinks the metered
+    bytes below the dense param count, training stays finite, and the
+    quantized payloads actually cross (wired != plain states)."""
+    key = jax.random.PRNGKey(11)
+    mk = lambda wire: Plan(mode="fedavg", model=make_model(),
+                           loss_fn=softmax_xent, optimizer=optim.adamw(1e-2),
+                           n_clients=2, local_steps=2, wire=wire).compile()
+    plain, wired = mk(()), mk((quantize_int8(),))
+    for s in (plain, wired):
+        s.init(key)
+        losses = s.fit(lambda r: image_shards(jax.random.fold_in(key, r), 2),
+                       rounds=3)
+        assert all(np.isfinite(losses)), losses
+    assert all(u > w > 0 for u, w in zip(plain.engine.meter.bytes_up,
+                                         wired.engine.meter.bytes_up))
+    a = jax.tree_util.tree_leaves(plain.state["global"])[0]
+    b = jax.tree_util.tree_leaves(wired.state["global"])[0]
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+    rep = wired.wire_report(image_shards(key, 2))
+    assert {w["name"] for w in rep} == {"model_pull", "model_push"}
+    assert rep[0]["bytes"] == wired.engine._wire_bytes
+    assert rep[0]["bytes"] < wired.engine._param_bytes
 
 
 def test_unknown_mode_rejected():

@@ -155,13 +155,20 @@ def test_fleet_parallel_schedule_bitwise_parity():
     assert_tree_equal(plain.state, fleet.state, exact=True)
 
 
-def test_fleet_wire_middleware_bitwise_parity():
+def test_fleet_wire_middleware_parity():
+    """quantize_int8 now also squeezes the p2p weight handoff (PR 4's
+    true low-precision wire), so the quant chain compiles inside BOTH
+    the plain scan and the shard_map scan — two XLA programs whose
+    fusion of the same math may round 1 ulp apart.  Losses still match
+    exactly; states to float tolerance; meters (pure python) exactly."""
     (plain, l_plain), (fleet, l_fleet) = run_pair(
         "vanilla", FleetSpec(n_devices=1),
         extra={"wire": (quantize_int8(),)})
     assert l_plain == l_fleet
-    assert_tree_equal(plain.state, fleet.state, exact=True)
+    assert_tree_equal(plain.state, fleet.state, exact=False,
+                      rtol=1e-6, atol=1e-8)
     assert plain.engine.meter.bytes_up == fleet.engine.meter.bytes_up
+    assert plain.engine.meter.sync_bytes == fleet.engine.meter.sync_bytes
 
 
 def test_fleet_evaluate_and_wire_report_match():
