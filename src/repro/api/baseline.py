@@ -1,6 +1,8 @@
 """Compiled baseline engines: the two methods the paper compares
-SplitNN against, lowered onto the same stacked-pytree + `vmap` round
-shape as `repro.engine.RoundEngine`.
+SplitNN against, lowered through the SAME step-program IR as the split
+modes (`repro.engine.topology.lower_baseline`) — their model pull/push
+wires are the program's `WeightHandoff` edges, and the engines are thin
+executor selections over that lowering.
 
   FedAvgEngine     — federated averaging (McMahan et al. 2017): every
       client runs `local_steps` full-model steps (`lax.scan`) on its
@@ -10,6 +12,10 @@ shape as `repro.engine.RoundEngine`.
       `vmap` per-client full-model gradients, all-reduce (mean), one
       server update.  With n_clients=1 this is plain monolithic training,
       which is how `launch/train.py --mode monolithic` now runs.
+
+`microbatches=M` (Plan(schedule="pipelined", microbatches=M)) streams
+each client's batch through the local gradient in M accumulated chunks
+— M=1 is bit-identical to the plain round.
 
 Both keep the eager trainers' Meter semantics exactly (model pull/push
 per round for fedavg; grad push + model pull per step for large-batch),
@@ -34,10 +40,15 @@ import jax.numpy as jnp
 
 from repro.core.accounting import Meter, bytes_of_tree, flops_of_fn
 from repro.core.wire_compress import as_dense, pack_int8, payload_nbytes
-from repro.engine.engine import stack_trees
 from repro.engine.fleet import FleetMeshMixin, FleetSpec
+from repro.engine.program import microbatch_mean, stack_trees
+from repro.engine.topology import lower_baseline
 from repro.nn.dist import shard_map_norep as shard_map
 from repro.optim import apply_updates
+
+
+def _tree_mean0(tree):
+    return jax.tree_util.tree_map(lambda a: a.mean(0), tree)
 
 
 class _WireModelMixin:
@@ -91,8 +102,13 @@ class FedAvgEngine(_WireModelMixin):
     n_clients: int
     local_steps: int = 1
     wire_stack: Any = None       # repro.api.wire.WireStack | None
+    microbatches: int = 1        # Plan(schedule="pipelined") only
 
     def __post_init__(self):
+        if self.microbatches < 1:
+            raise ValueError("microbatches must be >= 1")
+        self.program = lower_baseline("fedavg",
+                                      local_steps=self.local_steps)
         self.meter = Meter(self.n_clients)
         self._flops_per_batch = None
         self._param_bytes = None
@@ -108,26 +124,42 @@ class FedAvgEngine(_WireModelMixin):
     def _local_loss(self, params, batch):
         return self.loss_fn(self.apply_fn(params, batch), batch["labels"])
 
-    def _round(self, state, batches):
-        pulled = self._wire_tree(state["global"], "model_pull", "down")
+    def _local_grad(self, params, batch):
+        """One local full-model gradient; microbatches > 1 streams the
+        batch through in M accumulated chunks (mean loss/grad — equal
+        to the full-batch gradient for mean-reduction losses)."""
+        if self.microbatches == 1:
+            return jax.value_and_grad(self._local_loss)(params, batch)
+        return microbatch_mean(
+            lambda mb: jax.value_and_grad(self._local_loss)(params, mb),
+            batch, self.microbatches)
 
+    def _local_fit(self, pulled, opts, batches):
+        """vmap(clients) x scan(local_steps) — the ClientFwd/ClientBwd
+        body of the fedavg step program, shared with the mesh-sharded
+        interpreter (`FleetFedAvgEngine`)."""
         def local(opt, batch):
             def step(carry, _):
                 p, o = carry
-                loss, g = jax.value_and_grad(self._local_loss)(p, batch)
+                loss, g = self._local_grad(p, batch)
                 ups, o = self.optimizer.update(g, o, p)
                 return (apply_updates(p, ups), o), loss
             (p, opt), losses = jax.lax.scan(
                 step, (pulled, opt), None, length=self.local_steps)
             return p, opt, losses[-1]
 
-        locals_, opts, losses = jax.vmap(local)(state["opt"], batches)
+        return jax.vmap(local)(opts, batches)
+
+    def _round(self, state, batches):
+        pull, push = self.program.handoff_steps()
+        pulled = self._wire_tree(state["global"], pull.name, pull.direction)
+        locals_, opts, losses = self._local_fit(pulled, state["opt"],
+                                                batches)
         # push: each client's local model crosses the wire before the
         # average (per-row quant along the last axis is invariant to the
         # stacked leading client dim, so this is per-client quantization)
-        pushed = self._wire_tree(locals_, "model_push", "up")
-        new_global = jax.tree_util.tree_map(lambda a: a.mean(0), pushed)
-        return {"global": new_global, "opt": opts}, losses
+        pushed = self._wire_tree(locals_, push.name, push.direction)
+        return {"global": _tree_mean0(pushed), "opt": opts}, losses
 
     def run_round(self, state, batches):
         """batches: dict of (N, ...) stacked per-client arrays."""
@@ -163,8 +195,12 @@ class LargeBatchEngine(_WireModelMixin):
     optimizer: "Optimizer"
     n_clients: int
     wire_stack: Any = None       # repro.api.wire.WireStack | None
+    microbatches: int = 1        # Plan(schedule="pipelined") only
 
     def __post_init__(self):
+        if self.microbatches < 1:
+            raise ValueError("microbatches must be >= 1")
+        self.program = lower_baseline("large_batch")
         self.meter = Meter(self.n_clients)
         self._flops_per_batch = None
         self._param_bytes = None
@@ -178,14 +214,22 @@ class LargeBatchEngine(_WireModelMixin):
     def _loss(self, params, batch):
         return self.loss_fn(self.apply_fn(params, batch), batch["labels"])
 
+    def _shard_grad(self, pulled, batch):
+        """One client's full-model gradient (ClientFwd/ClientBwd of the
+        step program); microbatches > 1 accumulates in M chunks."""
+        if self.microbatches == 1:
+            return jax.value_and_grad(self._loss)(pulled, batch)
+        return microbatch_mean(
+            lambda mb: jax.value_and_grad(self._loss)(pulled, mb),
+            batch, self.microbatches)
+
     def _step(self, state, batches):
-        pulled = self._wire_tree(state["global"], "model_pull", "down")
+        pull, push = self.program.handoff_steps()
+        pulled = self._wire_tree(state["global"], pull.name, pull.direction)
         losses, grads = jax.vmap(
-            lambda b: jax.value_and_grad(self._loss)(pulled, b)
-        )(batches)
-        pushed = self._wire_tree(grads, "grad_push", "up")
-        g_mean = jax.tree_util.tree_map(lambda a: a.mean(0), pushed)
-        ups, opt = self.optimizer.update(g_mean, state["opt"],
+            lambda b: self._shard_grad(pulled, b))(batches)
+        pushed = self._wire_tree(grads, push.name, push.direction)
+        ups, opt = self.optimizer.update(_tree_mean0(pushed), state["opt"],
                                          state["global"])
         return {"global": apply_updates(state["global"], ups),
                 "opt": opt}, losses
@@ -242,20 +286,13 @@ class FleetFedAvgEngine(FleetMeshMixin, FedAvgEngine):
         return super().run_round(state, batches)
 
     def _shard_round(self, global_, opts, batches):
-        pulled = self._wire_tree(global_, "model_pull", "down")
-
-        def local(opt, batch):
-            def step(carry, _):
-                p, o = carry
-                loss, g = jax.value_and_grad(self._local_loss)(p, batch)
-                ups, o = self.optimizer.update(g, o, p)
-                return (apply_updates(p, ups), o), loss
-            (p, opt), losses = jax.lax.scan(
-                step, (pulled, opt), None, length=self.local_steps)
-            return p, opt, losses[-1]
-
-        locals_, opts, losses = jax.vmap(local)(opts, batches)
-        pushed = self._wire_tree(locals_, "model_push", "up")
+        """The mesh-sharded interpreter of the same fedavg step program:
+        identical `_local_fit` body per shard, cross-shard model mean as
+        one psum."""
+        pull, push = self.program.handoff_steps()
+        pulled = self._wire_tree(global_, pull.name, pull.direction)
+        locals_, opts, losses = self._local_fit(pulled, opts, batches)
+        pushed = self._wire_tree(locals_, push.name, push.direction)
         return self._psum_mean(pushed), opts, losses
 
     def _round(self, state, batches):
@@ -288,10 +325,14 @@ class FleetLargeBatchEngine(FleetMeshMixin, LargeBatchEngine):
         return super().run_round(state, batches)
 
     def _shard_step(self, global_, opt, batches):
-        pulled = self._wire_tree(global_, "model_pull", "down")
+        """Mesh-sharded interpreter of the large_batch step program:
+        identical per-shard `_shard_grad`, gradient mean as one psum."""
+        pull, push = self.program.handoff_steps()
+        pulled = self._wire_tree(global_, pull.name, pull.direction)
         losses, grads = jax.vmap(
-            lambda b: jax.value_and_grad(self._loss)(pulled, b))(batches)
-        g_mean = self._psum_mean(self._wire_tree(grads, "grad_push", "up"))
+            lambda b: self._shard_grad(pulled, b))(batches)
+        g_mean = self._psum_mean(self._wire_tree(grads, push.name,
+                                                 push.direction))
         ups, opt = self.optimizer.update(g_mean, opt, global_)
         return apply_updates(global_, ups), opt, losses
 

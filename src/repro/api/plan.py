@@ -4,10 +4,12 @@ A `Plan` names the collaboration mode (all six split topologies of the
 paper plus the two baselines it compares against), where the cut falls,
 who the parties are (`n_clients`), how turns are scheduled, and an
 ordered stack of `WireTransform` middleware applied at the cut.
-`Plan.compile()` lowers it onto one compiled engine — the jitted
-scan/vmap `RoundEngine` for split modes, the vmap `FedAvgEngine` /
-`LargeBatchEngine` for the baselines — wrapped in a `Session` with a
-uniform `fit/evaluate/meter` surface:
+`Plan.compile()` lowers it onto the step-program IR
+(`repro.engine.program`) and picks an executor — the serial scan,
+SplitFed-parallel vmap, or the microbatch-pipelined schedule
+(`schedule="pipelined", microbatches=M`: the server works on
+microbatch m while the client computes m+1's forward) — wrapped in a
+`Session` with a uniform `fit/evaluate/evaluate_all/meter` surface:
 
     plan = Plan(mode="vanilla", model=seg_model, cut=2, n_clients=8,
                 wire=[quantize_int8(), dp_noise(0.05)])
@@ -122,6 +124,7 @@ class Plan:
     heads: Sequence[tuple] | None = None  # ((init, apply), ...) multitask
     n_clients: int = 1
     schedule: str | None = None           # None -> mode default
+    microbatches: int = 1                 # schedule="pipelined" only
     sync: str = "p2p"
     loss_fn: Callable = softmax_xent
     optimizer: "Optimizer | None" = None  # None -> adamw(1e-3)
@@ -147,9 +150,13 @@ class Plan:
 
     @property
     def effective_schedule(self) -> str:
+        sched = {"serial": "round_robin"}.get(self.schedule, self.schedule)
         if self.mode in BRANCH_MODES:
-            return "parallel"
-        return self.schedule or "round_robin"
+            # branch fan-in kinds have no turn axis; "pipelined" streams
+            # the joint batch as microbatches, everything else is the
+            # one-vmapped-step parallel round
+            return "pipelined" if sched == "pipelined" else "parallel"
+        return sched or "round_robin"
 
     # ---- lowering ----------------------------------------------------------
 
@@ -193,11 +200,21 @@ class Plan:
                                      *self.mid, *self.trunk)
 
     def compile(self) -> "_session.Session":
-        """Lower this plan onto ONE compiled engine and wrap it in a
+        """Lower this plan onto ONE compiled engine (an executor
+        selection over the shared step-program IR) and wrap it in a
         `Session`."""
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, "
                              f"got {self.mode!r}")
+        self._require(self.microbatches >= 1, "microbatches must be >= 1")
+        self._require(self.microbatches == 1
+                      or self.effective_schedule == "pipelined",
+                      "microbatches > 1 requires schedule='pipelined'")
+        if self.effective_schedule == "pipelined":
+            self._require(self.fleet is None,
+                          "the pipelined schedule is single-mesh only for "
+                          "now (ROADMAP: double-buffer the cut across the "
+                          "ppermute ring)")
         stack = WireStack(self.wire)
         opt_c, opt_s = self._optimizers()
         if self.mode in BASELINE_MODES:
@@ -205,6 +222,7 @@ class Plan:
             kw = dict(init_fn=fns.init, apply_fn=fns.apply,
                       loss_fn=self.loss_fn, optimizer=opt_c,
                       n_clients=self.n_clients,
+                      microbatches=self.microbatches,
                       wire_stack=stack if stack else None)
             if self.mode == "fedavg":
                 kw["local_steps"] = self.local_steps
@@ -222,6 +240,7 @@ class Plan:
                   optimizer_client=opt_c, optimizer_server=opt_s,
                   n_clients=self.n_clients,
                   schedule=self.effective_schedule, sync=self.sync,
+                  microbatches=self.microbatches,
                   wire_stack=stack if stack else None)
         if self.fleet is not None:
             kw["fleet"] = self.fleet

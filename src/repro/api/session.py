@@ -115,6 +115,19 @@ class Session:
             return self.engine.evaluate(self.state, batch, client=client)
         return self.engine.evaluate(self.state, batch)
 
+    def evaluate_all(self, batch):
+        """Per-client accuracies on one eval batch, vmapped over the
+        WHOLE stacked client axis — `evaluate` scores a single stack
+        slice, which hides the fleet's spread once clients diverge
+        (parallel/pipelined schedules, non-IID shards).  Returns an
+        (n_clients,) array for the turn topologies, shape (1,) for
+        branch fan-in modes and the baselines (one joint model)."""
+        if self.state is None:
+            self.init()
+        if self.is_split:
+            return self.engine.evaluate_all(self.state, batch)
+        return self.engine.evaluate(self.state, batch)[None]
+
     def meter(self) -> dict:
         """Cumulative per-client resource totals (TFLOPs / GB)."""
         return self.engine.meter.totals()

@@ -304,10 +304,19 @@ def with_wire(topology: Topology, stack: WireStack) -> Topology:
             return None
         return lambda *args: fn(*args, WireTape(stack))
 
+    def tape_rest(fn):
+        """The staged pipelined turn crosses the same middleware: its
+        trailing `wires` argument is replaced by a fresh tape per call
+        (records discarded, values transformed in-graph)."""
+        if fn is None:
+            return None
+        return lambda *args: fn(*args[:-1], WireTape(stack))
+
     return dataclasses.replace(
         topology,
         turn_grads=(None if topology.turn_grads is None
                     else drop_wires(topology.turn_grads_wires)),
         turn_grads_wires=wrap_wires(topology.turn_grads_wires),
         round_grads=(None if topology.round_grads is None
-                     else drop_wires(topology.turn_grads_wires)))
+                     else drop_wires(topology.turn_grads_wires)),
+        pipeline_rest=tape_rest(topology.pipeline_rest))

@@ -4,8 +4,10 @@ al. 2017) and large-batch synchronous SGD (Chen et al. 2016).
 DEPRECATED: these trainers are thin shims over `repro.api.Plan`
 (mode="fedavg" / mode="large_batch") — `train_round`/`train_step`
 delegate to the compiled `FedAvgEngine`/`LargeBatchEngine` built through
-the Plan API, so shim and Plan stay bit-identical.  `backend="eager"`
-keeps the original per-client Python loops as the verified reference.
+the Plan API, whose rounds interpret the shared step-program lowering
+(`repro.engine.topology.lower_baseline`), so shim and Plan stay
+bit-identical.  `backend="eager"` keeps the original per-client Python
+loops as the verified reference.
 """
 from __future__ import annotations
 

@@ -10,11 +10,14 @@ run loop.
 
 DEPRECATED: these trainers are thin shims over the declarative
 `repro.api.Plan` — their compiled engines come from
-`Plan(mode=..., ...).compile()`, so they stay bit-identical to the new
-API.  New code should build a `Plan` directly (see README).
-`backend="eager"` keeps the original per-turn Python loop — it is the
-reference the engine is verified against (tests/test_engine.py) and the
-baseline in benchmarks/engine_bench.py.
+`Plan(mode=..., ...).compile()` and therefore run the shared
+step-program IR executors (`repro.engine.program`), so they stay
+bit-identical to the new API.  The shims own NO engine code of their
+own: state stacking lives in `repro.engine.stack_state/unstack_state`,
+scheduling in the IR executors.  New code should build a `Plan`
+directly (see README).  `backend="eager"` keeps the original per-turn
+Python loop — it is the reference the engine is verified against
+(tests/test_engine.py) and the baseline in benchmarks/engine_bench.py.
 """
 from __future__ import annotations
 
@@ -110,10 +113,11 @@ class SplitTrainer:
                 state, loss = self.client_turn(state, ci, batch)
                 losses.append(loss)
             return state, jnp.stack(losses).mean()
-        est = _stack_state(state, self.n_clients)
+        eng = _engine()
+        est = eng.stack_state(state, self.n_clients)
         est, losses = self.engine.run_round(
-            est, _engine().stack_batches(client_batches))
-        return _unstack_state(est, self.n_clients), losses.mean()
+            est, eng.stack_batches(client_batches))
+        return eng.unstack_state(est, self.n_clients), losses.mean()
 
     def client_turn(self, state, ci: int, batch):
         x, y = batch["x"], batch["labels"]
@@ -169,16 +173,6 @@ def _ragged(client_batches: list[dict]) -> bool:
     sigs = {tuple(sorted((k, tuple(v.shape)) for k, v in b.items()))
             for b in client_batches}
     return len(sigs) > 1
-
-
-def _stack_state(state, n: int) -> dict:
-    """Protocol list-of-trees state -> stacked engine state (the single
-    implementation lives in repro.engine.engine)."""
-    return _engine().stack_state(state, n)
-
-
-def _unstack_state(est, n: int) -> dict:
-    return _engine().unstack_state(est, n)
 
 
 @dataclasses.dataclass

@@ -1,16 +1,26 @@
-"""Compiled multi-client round engine (scan / vmap schedules over
-declarative split topologies; `fleet` shards the client axis over a
-device mesh)."""
-from repro.engine.engine import (RoundEngine, stack_batches, stack_state,
-                                 stack_trees, tree_index, tree_update,
-                                 unstack_state, unstack_tree)
+"""Compiled multi-client round engine: every collaboration mode lowers
+to one step-program IR (`repro.engine.program`), interpreted by
+interchangeable executors (serial scan / SplitFed vmap / microbatch-
+pipelined; `fleet` shards the client axis over a device mesh)."""
+from repro.engine.engine import RoundEngine, SCHEDULES
 from repro.engine.fleet import FleetRoundEngine, FleetSpec
+from repro.engine.program import (EXECUTORS, Aggregate, ClientBwd,
+                                  ClientFwd, ExecContext, RecvGrad,
+                                  SendCut, ServerFwdBwd, Step, StepProgram,
+                                  WeightHandoff, stack_batches, stack_state,
+                                  stack_trees, tree_index, tree_update,
+                                  unstack_state, unstack_tree)
 from repro.engine.topology import (BRANCH_KINDS, KINDS, Topology,
-                                   extended_vanilla, multihop, multitask,
-                                   u_shaped, vanilla, vanilla_fns, vertical)
+                                   extended_vanilla, lower, lower_baseline,
+                                   multihop, multitask, u_shaped, vanilla,
+                                   vanilla_fns, vertical)
 
 __all__ = ["RoundEngine", "FleetRoundEngine", "FleetSpec", "Topology",
-           "KINDS", "BRANCH_KINDS", "vanilla", "vanilla_fns", "u_shaped",
-           "vertical", "multihop", "multitask", "extended_vanilla",
+           "KINDS", "BRANCH_KINDS", "SCHEDULES", "vanilla", "vanilla_fns",
+           "u_shaped", "vertical", "multihop", "multitask",
+           "extended_vanilla", "lower", "lower_baseline",
+           "StepProgram", "Step", "ClientFwd", "SendCut", "ServerFwdBwd",
+           "RecvGrad", "ClientBwd", "Aggregate", "WeightHandoff",
+           "ExecContext", "EXECUTORS",
            "stack_batches", "stack_trees", "unstack_tree", "tree_index",
            "tree_update", "stack_state", "unstack_state"]

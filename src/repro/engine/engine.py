@@ -1,23 +1,38 @@
-"""Compiled multi-client round engine.
+"""Compiled multi-client round engine — a thin executor selection over
+the step-program IR.
 
-The seed trainers drove every client turn as an eager Python loop —
-per-turn dispatch, no `jit`, and a Python list of per-client parameter
-trees.  The engine instead stacks the N client pytrees along a leading
-client axis and expresses ONE WHOLE ROUND as a single compiled program:
+The seed trainers drove every client turn as an eager Python loop; the
+engine stacks the N client pytrees along a leading client axis and runs
+ONE WHOLE ROUND as a single compiled program.  Since the IR refactor the
+engine owns no schedule or mode dispatch of its own: the topology lowers
+to a `repro.engine.program.StepProgram` once, and `schedule=` picks the
+interpreter —
 
-  schedule="round_robin"  — `jax.lax.scan` over client turns, preserving
-      the paper's serial round-robin + p2p weight-handoff semantics
-      inside the scan carry (client i pulls the last trained client's
-      weights before its turn, exactly like the eager trainer);
-  schedule="parallel"     — SplitFed-style (Thapa et al., AAAI 2022):
-      `vmap` all client forwards/backwards at once and update the server
-      with the mean cut gradient; clients step on their own gradients.
+  schedule="round_robin"  — `program.run_serial`: `jax.lax.scan` over
+      client turns, preserving the paper's serial round-robin + p2p
+      weight-handoff semantics inside the scan carry;
+  schedule="parallel"     — `program.run_parallel`: SplitFed-style
+      (Thapa et al., AAAI 2022) vmap of all client turns, server steps
+      on the mean cut gradient;
+  schedule="pipelined"    — `program.run_pipelined`: each client batch
+      splits into `microbatches` microbatches double-buffered across
+      the cut (the server works on microbatch m while the client
+      computes m+1's forward — a staged-carry `lax.scan`); M=1
+      reproduces the serial math, M>=2 is the schedule the pre-IR
+      engines could not express.
+
+Branch fan-in topologies (vertical / multitask / extended_vanilla) have
+no turn axis; their joint round runs through `program.run_branch`
+whatever the schedule names.
 
 Resource accounting stays exact under jit: wire shapes are static per
 (topology, batch shape), so the engine traces ONE probe
 (`accounting.probe_wire_records`) and then accumulates `TurnCost`s
-analytically per turn — byte/FLOP totals match the eager `Meter` path
-bit-for-bit (tests/test_engine.py).
+analytically per turn.  WHICH crossings each client pays for is read
+off the program's `SendCut`/`RecvGrad` edges (`program.billed_wires`)
+— the billing metadata lives on the IR, not in per-engine dispatch —
+and byte/FLOP totals match the eager `Meter` path bit-for-bit
+(tests/test_engine.py).
 """
 from __future__ import annotations
 
@@ -29,74 +44,13 @@ import jax.numpy as jnp
 
 from repro.core.accounting import (Meter, TurnCost, bytes_of_tree,
                                    flops_of_fn, probe_wire_records)
-from repro.engine.topology import BRANCH_KINDS, Topology
-from repro.optim import apply_updates
+from repro.engine.program import (EXECUTORS, ExecContext, run_branch,
+                                  run_branch_pipelined, stack_trees,
+                                  tree_index)
+from repro.engine.topology import Topology, lower
 
-SCHEDULES = ("round_robin", "parallel")
+SCHEDULES = ("round_robin", "parallel", "pipelined")
 
-
-# ---------------------------------------------------------------------------
-# stacked-pytree helpers
-# ---------------------------------------------------------------------------
-
-def stack_trees(trees: list):
-    """[tree] * N -> tree with a leading client axis on every leaf."""
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
-
-
-def unstack_tree(tree, n: int) -> list:
-    """Inverse of stack_trees (static n)."""
-    return [jax.tree_util.tree_map(lambda a: a[i], tree) for i in range(n)]
-
-
-def tree_index(tree, i):
-    """Dynamic (traced-index) slice of the leading client axis."""
-    return jax.tree_util.tree_map(
-        lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False), tree)
-
-
-def tree_update(tree, i, sub):
-    return jax.tree_util.tree_map(
-        lambda a, s: jax.lax.dynamic_update_index_in_dim(a, s, i, 0),
-        tree, sub)
-
-
-def stack_batches(batches: list[dict]) -> dict:
-    """[per-client batch dict] -> dict of (N, ...) arrays."""
-    return {k: jnp.stack([b[k] for b in batches]) for k in batches[0]}
-
-
-def copy_tree(tree):
-    """Leafwise device copy — gives a state tree its OWN buffers.  The
-    engines donate their input state to XLA (buffer reuse instead of a
-    per-round copy), so a state built from another tree's leaves must
-    not share them."""
-    return jax.tree_util.tree_map(jnp.copy, tree)
-
-
-def stack_state(state: dict, n: int) -> dict:
-    """List-of-trees trainer state -> stacked engine state.  The single
-    canonical copy (core.protocol re-exports it for back-compat).  The
-    non-stacked leaves are COPIED, not shared: the compiled round
-    donates its input buffers."""
-    return {"clients": stack_trees(state["clients"]),
-            "server": copy_tree(state["server"]),
-            "opt_c": stack_trees(state["opt_c"]),
-            "opt_s": copy_tree(state["opt_s"]),
-            "last_trained": jnp.asarray(state["last_trained"], jnp.int32)}
-
-
-def unstack_state(est: dict, n: int) -> dict:
-    return {"clients": unstack_tree(est["clients"], n),
-            "server": est["server"],
-            "opt_c": unstack_tree(est["opt_c"], n),
-            "opt_s": est["opt_s"],
-            "last_trained": int(est["last_trained"])}
-
-
-# ---------------------------------------------------------------------------
-# engine
-# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class RoundEngine:
@@ -106,16 +60,30 @@ class RoundEngine:
     optimizer_client: "Optimizer"
     optimizer_server: "Optimizer"
     n_clients: int
-    schedule: str = "round_robin"       # "round_robin" | "parallel"
-    sync: str = "p2p"                   # "p2p" | "none"  (round_robin only)
+    schedule: str = "round_robin"       # see SCHEDULES
+    sync: str = "p2p"                   # "p2p" | "none"  (serial/pipelined)
     wire_stack: Any = None              # repro.api.wire.WireStack | None
+    microbatches: int = 1               # pipelined schedule only
 
     def __post_init__(self):
+        if self.schedule == "serial":       # IR executor name, accepted
+            self.schedule = "round_robin"
         if self.schedule not in SCHEDULES:
             raise ValueError(f"schedule must be one of {SCHEDULES}")
-        if self.topology.parallel_only and self.schedule != "parallel":
+        if self.topology.parallel_only and self.schedule == "round_robin":
             raise ValueError(
                 f"{self.topology.kind} topology is parallel-only")
+        if self.microbatches < 1:
+            raise ValueError("microbatches must be >= 1")
+        if self.microbatches > 1 and self.schedule != "pipelined":
+            raise ValueError("microbatches > 1 requires "
+                             "schedule='pipelined'")
+        if (self.schedule == "pipelined"
+                and not self.topology.parallel_only
+                and self.topology.pipeline_fwd is None):
+            raise ValueError(
+                f"{self.topology.kind} topology exposes no staged turn "
+                "(pipeline_fwd/rest/bwd) — pipelined schedule unavailable")
         self.meter = Meter(self.n_clients)
         self._client_param_bytes = 0
         self._turn_costs: dict = {}     # batch-shape key -> TurnCost
@@ -127,6 +95,15 @@ class RoundEngine:
         stack = self.wire_stack
         self._wire_handoff = bool(stack is not None
                                   and getattr(stack, "has_handoff", False))
+        # ONE lowering, many interpreters: the program carries the step
+        # sequence (wire edges + billing) and the staged callables
+        self.program = lower(self.topology)
+        self._ctx = ExecContext(
+            n_clients=self.n_clients, sync=self.sync, loss_fn=self.loss_fn,
+            optimizer_client=self.optimizer_client,
+            optimizer_server=self.optimizer_server,
+            wire_stack=self.wire_stack, wire_handoff=self._wire_handoff,
+            microbatches=self.microbatches)
         # the incoming train-state is donated: XLA reuses its buffers for
         # the round's output instead of allocating a full copy per round
         self._round_jit = jax.jit(self._round, donate_argnums=(0,))
@@ -167,79 +144,12 @@ class RoundEngine:
         return state, losses
 
     def _round(self, state, batches):
-        if self.topology.parallel_only:
-            return self._vertical_round(state, batches)
-        if self.schedule == "parallel":
-            return self._parallel_round(state, batches)
-        return self._scan_round(state, batches)
-
-    def _scan_round(self, state, batches):
-        """Round-robin as lax.scan; carry = (clients, opt_c, server,
-        opt_s, last_trained)."""
-        n, sync = self.n_clients, self.sync
-
-        def body(carry, inp):
-            ci, batch = inp
-            clients, opt_c, server, opt_s, last = carry
-            pc = tree_index(clients, ci)
-            if sync == "p2p" and n > 1:
-                # pull the last trained client's weights (p2p handoff);
-                # with wire middleware the payload crosses the same
-                # quantized wire the cut activations do
-                prev = tree_index(clients, jnp.maximum(last, 0))
-                if self._wire_handoff:
-                    prev = self.wire_stack.handoff_recv(prev)
-                take = (last >= 0) & (last != ci)
-                pc = jax.tree_util.tree_map(
-                    lambda own, pv: jnp.where(take, pv, own), pc, prev)
-            loss, g_c, g_s = self.topology.turn_grads(
-                pc, server, batch, self.loss_fn)
-            ups_c, oc = self.optimizer_client.update(
-                g_c, tree_index(opt_c, ci), pc)
-            pc = apply_updates(pc, ups_c)
-            ups_s, opt_s = self.optimizer_server.update(g_s, opt_s, server)
-            server = apply_updates(server, ups_s)
-            return ((tree_update(clients, ci, pc),
-                     tree_update(opt_c, ci, oc), server, opt_s, ci), loss)
-
-        carry = (state["clients"], state["opt_c"], state["server"],
-                 state["opt_s"], state["last_trained"])
-        (clients, opt_c, server, opt_s, last), losses = jax.lax.scan(
-            body, carry, (jnp.arange(n, dtype=jnp.int32), batches))
-        return {"clients": clients, "server": server, "opt_c": opt_c,
-                "opt_s": opt_s, "last_trained": last}, losses
-
-    def _parallel_round(self, state, batches):
-        """SplitFed: vmap client turns, server steps on the MEAN cut
-        gradient; no p2p handoff (clients stay independent)."""
-        losses, g_c, g_s = jax.vmap(
-            lambda pc, b: self.topology.turn_grads(
-                pc, state["server"], b, self.loss_fn),
-            in_axes=(0, 0))(state["clients"], batches)
-        ups_c, opt_c = jax.vmap(self.optimizer_client.update)(
-            g_c, state["opt_c"], state["clients"])
-        clients = apply_updates(state["clients"], ups_c)
-        g_s_mean = jax.tree_util.tree_map(lambda g: g.mean(0), g_s)
-        ups_s, opt_s = self.optimizer_server.update(
-            g_s_mean, state["opt_s"], state["server"])
-        server = apply_updates(state["server"], ups_s)
-        return {"clients": clients, "server": server, "opt_c": opt_c,
-                "opt_s": opt_s, "last_trained": state["last_trained"]}, losses
-
-    def _vertical_round(self, state, batches):
-        """All branches contribute to one step; client grads come back
-        stacked from the topology."""
-        loss, g_c, g_s = self.topology.round_grads(
-            state["clients"], state["server"], batches, self.loss_fn)
-        ups_c, opt_c = jax.vmap(self.optimizer_client.update)(
-            g_c, state["opt_c"], state["clients"])
-        clients = apply_updates(state["clients"], ups_c)
-        ups_s, opt_s = self.optimizer_server.update(
-            g_s, state["opt_s"], state["server"])
-        server = apply_updates(state["server"], ups_s)
-        return {"clients": clients, "server": server, "opt_c": opt_c,
-                "opt_s": opt_s,
-                "last_trained": state["last_trained"]}, loss[None]
+        prog, ctx = self.program, self._ctx
+        if prog.round_type == "branch":
+            if self.schedule == "pipelined" and self.microbatches > 1:
+                return run_branch_pipelined(prog, ctx, state, batches)
+            return run_branch(prog, ctx, state, batches)
+        return EXECUTORS[self.schedule](prog, ctx, state, batches)
 
     # ---- jit-safe resource accounting -------------------------------------
 
@@ -276,30 +186,25 @@ class RoundEngine:
         return self._turn_costs[key]
 
     def _account_round(self, state, batches, *, first_round: bool):
+        """Bill the round from the program's wire edges: each client
+        pays for the `SendCut`/`RecvGrad` steps whose `owner`/`client`
+        metadata point at it (`program.billed_wires`) — relay traffic
+        (multihop downstream hops, the extended_vanilla intermediate
+        client) stays unbilled, exactly as the eager meters do."""
         cost = self.turn_cost(state, batches)
+        by_name: dict = {}
+        for w in cost.wires:
+            by_name.setdefault(w.name, []).append(w)
+        handoff = (self.schedule in ("round_robin", "pipelined")
+                   and self.program.round_type == "turn"
+                   and self.sync == "p2p" and self.n_clients > 1)
         for ci in range(self.n_clients):
-            if self.topology.kind in BRANCH_KINDS:
-                # the probe saw the whole round: each client owns only its
-                # branch's act/grad wires (extended_vanilla's mid wires are
-                # the intermediate client's traffic — not billed here)
-                self.meter.add_flops(ci, cost.flops)
-                self.meter.add_wires(ci, [
-                    w for w in cost.wires
-                    if w.name.startswith(f"branch_{ci}_")])
-                continue
-            synced = (self.schedule == "round_robin"
-                      and self.sync == "p2p" and self.n_clients > 1
-                      and not (first_round and ci == 0))
-            if self.topology.kind == "multihop":
-                # the data client only touches the FIRST hop's wire; the
-                # hop-to-hop traffic downstream is server-side
-                self.meter.add_flops(ci, cost.flops)
-                self.meter.add_wires(ci, [w for w in cost.wires
-                                          if w.name.startswith("hop_0_")])
-                if synced:
-                    self.meter.sync_bytes[ci] += cost.sync_bytes
-                continue
-            self.meter.add_turn_cost(ci, cost, synced=synced)
+            self.meter.add_flops(ci, cost.flops)
+            self.meter.add_wires(ci, [
+                w for name in self.program.billed_wires(ci)
+                for w in by_name.get(name, ())])
+            if handoff and not (first_round and ci == 0):
+                self.meter.sync_bytes[ci] += cost.sync_bytes
 
     # ---- eval --------------------------------------------------------------
 
@@ -312,3 +217,17 @@ class RoundEngine:
                                         state["clients"])
             logits = self.topology.evaluate(pc, state["server"], batch)
         return (jnp.argmax(logits, -1) == batch["labels"]).mean()
+
+    def evaluate_all(self, state, batch):
+        """Per-client accuracy over the WHOLE stacked client axis in one
+        vmapped forward — clients diverge under the parallel schedule,
+        so evaluating only client 0 hides the fleet's spread.  Branch
+        fan-in kinds have a single joint fleet: shape (1,) there,
+        (n_clients,) otherwise."""
+        if self.topology.parallel_only:
+            return self.evaluate(state, batch)[None]
+        accs = jax.vmap(
+            lambda pc: (jnp.argmax(
+                self.topology.evaluate(pc, state["server"], batch),
+                -1) == batch["labels"]).mean())(state["clients"])
+        return accs

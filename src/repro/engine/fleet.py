@@ -48,8 +48,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.engine.engine import (RoundEngine, apply_updates, tree_index,
-                                 tree_update)
+from repro.engine.engine import RoundEngine
+from repro.engine.program import tree_index, tree_update
+from repro.optim import apply_updates
 from repro.launch.mesh import make_fleet_mesh
 from repro.nn.dist import (shard_map_norep as shard_map, tree_ppermute,
                            tree_psum, tree_replicate_from, tree_where)
@@ -145,6 +146,11 @@ class FleetRoundEngine(FleetMeshMixin, RoundEngine):
     mesh: Any = None
 
     def __post_init__(self):
+        if self.schedule == "pipelined":
+            raise NotImplementedError(
+                "the pipelined schedule is single-mesh only for now — "
+                "double-buffering the cut across a ppermute ring is a "
+                "ROADMAP item; use schedule='parallel' with fleet=")
         self._fleet_setup(force_replicate=self.topology.parallel_only)
         super().__post_init__()
         sh, rep = P(self._ax), P()
@@ -205,9 +211,11 @@ class FleetRoundEngine(FleetMeshMixin, RoundEngine):
         cut-gradient sum to the (replicated) server update.  sum/N over
         the psum is bit-identical to the single-device mean(0) at D=1
         and the mathematically identical mean at D>1 (summation order
-        differs across shards — allclose, not bitwise)."""
+        differs across shards — allclose, not bitwise).  The turn itself
+        is the shared step-program's (`self.program`) — this body is the
+        mesh-sharded interpreter of the same lowering."""
         losses, g_c, g_s = jax.vmap(
-            lambda pc, b: self.topology.turn_grads(
+            lambda pc, b: self.program.topology.turn_grads(
                 pc, server, b, self.loss_fn),
             in_axes=(0, 0))(clients, batches)
         ups_c, opt_c = jax.vmap(self.optimizer_client.update)(
@@ -265,7 +273,7 @@ class FleetRoundEngine(FleetMeshMixin, RoundEngine):
                                       unpack(handoff))
                     take = (last >= 0) & (last != gi)
                     pc = tree_where(take, prev, pc)
-                loss, g_c, g_s = self.topology.turn_grads(
+                loss, g_c, g_s = self.program.topology.turn_grads(
                     pc, server, batch, self.loss_fn)
                 ups_c, oc = self.optimizer_client.update(
                     g_c, tree_index(opt_c, li), pc)

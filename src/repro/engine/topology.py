@@ -1,4 +1,4 @@
-"""Declarative split-learning topologies.
+"""Declarative split-learning topologies + the step-program lowering.
 
 A `Topology` names *where* the cut(s) fall and lowers onto the explicit
 `jax.vjp` grad functions in `repro.core.split` — it owns no scheduling.
@@ -7,6 +7,20 @@ The compiled `RoundEngine` consumes the uniform (client, server) contract:
     init(key)                       -> (client_params, server_params)
     turn_grads(pc, ps, batch, lf)   -> (loss, g_client, g_server)
     turn_grads_wires(..., wires)    -> same, appending WireRecords
+
+`lower()` turns any Topology into a `repro.engine.program.StepProgram`
+— the typed step-sequence IR every executor (serial / parallel /
+pipelined) interprets; `lower_baseline()` does the same for the fedavg
+and large_batch comparison modes.  Each factory below also attaches:
+
+  * `steps` — its step sequence (wire crossings are first-class
+    `SendCut`/`RecvGrad` edges carrying the billing metadata the
+    engine's `TurnCost` accounting reads);
+  * `pipeline_fwd/rest/bwd` — the staged form of one turn the pipelined
+    executor double-buffers: fwd runs the client side up to the first
+    cut crossing, rest is everything beyond it (server fwd/bwd plus any
+    post-cut client work, e.g. the u-shaped tail), bwd rematerializes
+    the client forward from the returned cut gradient.
 
 Six paper configurations (Gupta & Raskar §3; Ceballos et al. 2020 for
 vertical; Fig. 4 for multi-hop / extended / multi-task):
@@ -31,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import split as sp
+from repro.engine import program as ir
 
 KINDS = ("vanilla", "u_shaped", "vertical", "multihop", "multitask",
          "extended_vanilla")
@@ -49,10 +64,78 @@ class Topology:
     client_fwd: Callable | None = None  # (pc, batch) -> first outbound act
     # vertical only: all clients contribute to ONE step
     round_grads: Callable | None = None  # (clients, ps, batch, loss_fn)
+    # the step-sequence IR this topology lowers to (see module docstring)
+    steps: tuple = ()
+    # staged turn (pipelined executor); turn kinds only
+    pipeline_fwd: Callable | None = None   # (pc, batch) -> act
+    # (pc, ps, act, batch, loss_fn, wires) -> (loss, g_rest, g_s, g_act)
+    pipeline_rest: Callable | None = None
+    pipeline_bwd: Callable | None = None   # (pc, batch, g_act, g_rest) -> g_c
 
     @property
     def parallel_only(self) -> bool:
         return self.round_grads is not None
+
+
+def lower(topology: Topology) -> ir.StepProgram:
+    """Topology -> the one `StepProgram` every executor interprets."""
+    branch = topology.parallel_only
+    return ir.StepProgram(
+        kind=topology.kind,
+        round_type="branch" if branch else "turn",
+        steps=tuple(topology.steps),
+        topology=topology,
+        split_batch=(ir.split_branch_batch if branch
+                     else ir.split_turn_batch))
+
+
+def lower_baseline(mode: str, *, local_steps: int = 1) -> ir.StepProgram:
+    """The comparison baselines' step programs: no cut — the whole
+    model (or its gradient) is the wire payload, priced on the
+    `WeightHandoff` edges by the same middleware stack."""
+    if mode == "fedavg":
+        steps = (ir.WeightHandoff(name="model_pull", direction="down"),
+                 ir.ClientFwd(stage="local", repeats=local_steps),
+                 ir.ClientBwd(stage="local"),
+                 ir.WeightHandoff(name="model_push", direction="up"),
+                 ir.Aggregate(what="mean_models"))
+    elif mode == "large_batch":
+        steps = (ir.WeightHandoff(name="model_pull", direction="down"),
+                 ir.ClientFwd(stage="full"),
+                 ir.ClientBwd(stage="full"),
+                 ir.WeightHandoff(name="grad_push", direction="up"),
+                 ir.Aggregate(what="mean_grads"))
+    else:
+        raise ValueError(f"unknown baseline mode {mode!r}")
+    return ir.StepProgram(kind=mode, round_type=mode, steps=steps,
+                          split_batch=ir.split_turn_batch)
+
+
+def _turn_steps(*inner) -> tuple:
+    """The shared turn-kind frame: optional p2p handoff edge in, one
+    optimizer step boundary out."""
+    return ((ir.WeightHandoff(name="p2p_handoff", direction="p2p",
+                              when="sync=p2p"),)
+            + tuple(inner) + (ir.Aggregate(what="step"),))
+
+
+def _branch_fanin_steps(n_clients: int) -> tuple:
+    """The K branch forwards + their billed wire edges (branch kinds)."""
+    out = []
+    for i in range(n_clients):
+        out += [ir.ClientFwd(stage=f"branch_{i}", client=i),
+                ir.SendCut(name=f"branch_{i}_act", direction="up",
+                           client=i)]
+    return tuple(out) + (ir.Aggregate(what="concat_features"),)
+
+
+def _branch_fanout_steps(n_clients: int) -> tuple:
+    out = []
+    for i in range(n_clients):
+        out += [ir.RecvGrad(name=f"branch_{i}_grad", direction="down",
+                            client=i),
+                ir.ClientBwd(stage=f"branch_{i}", client=i)]
+    return tuple(out) + (ir.Aggregate(what="step"),)
 
 
 def _drop_wires(turn_grads_wires):
@@ -64,6 +147,14 @@ def _drop_wires(turn_grads_wires):
 # ---------------------------------------------------------------------------
 # vanilla
 # ---------------------------------------------------------------------------
+
+VANILLA_STEPS = _turn_steps(
+    ir.ClientFwd(stage="client"),
+    ir.SendCut(name="cut_act", direction="up"),
+    ir.ServerFwdBwd(),
+    ir.RecvGrad(name="cut_grad", direction="down"),
+    ir.ClientBwd(stage="client"))
+
 
 def vanilla(model: sp.SegModel, cut: int) -> Topology:
     def init(key):
@@ -83,11 +174,38 @@ def vanilla(model: sp.SegModel, cut: int) -> Topology:
                                      offset=cut)
         return model.apply_range(ps, act, cut, model.n_segments)
 
+    def pipeline_fwd(pc, batch):
+        return model.apply_range(pc, batch["x"], 0, cut)
+
+    def pipeline_rest(pc, ps, act, batch, loss_fn, wires):
+        act = sp.record(wires, "cut_act", act, "up")
+
+        def server_loss(ps_, a):
+            if sp._takes_offset(model):
+                logits = model.apply_range(ps_, a, cut, model.n_segments,
+                                           offset=cut)
+            else:
+                logits = model.apply_range(ps_, a, cut, model.n_segments)
+            return loss_fn(logits, batch["labels"])
+
+        (loss,), vjp_s = jax.vjp(lambda p, a: (server_loss(p, a),),
+                                 ps, sp.as_dense(act))
+        g_s, g_act = vjp_s((jnp.ones(()),))
+        g_act = sp.record(wires, "cut_grad", g_act, "down")
+        return loss, {}, g_s, sp.as_dense(g_act)
+
+    def pipeline_bwd(pc, batch, g_act, g_rest):
+        _, vjp_c = jax.vjp(lambda p: pipeline_fwd(p, batch), pc)
+        (g_c,) = vjp_c(g_act)
+        return g_c
+
     return Topology(kind="vanilla", init=init,
                     turn_grads=_drop_wires(turn_grads_wires),
                     turn_grads_wires=turn_grads_wires, evaluate=evaluate,
                     client_fwd=lambda pc, b: model.apply_range(
-                        pc, b["x"], 0, cut))
+                        pc, b["x"], 0, cut),
+                    steps=VANILLA_STEPS, pipeline_fwd=pipeline_fwd,
+                    pipeline_rest=pipeline_rest, pipeline_bwd=pipeline_bwd)
 
 
 def vanilla_fns(init_full: Callable, split: Callable, client_apply: Callable,
@@ -113,10 +231,26 @@ def vanilla_fns(init_full: Callable, split: Callable, client_apply: Callable,
     def evaluate(pc, ps, batch):
         return server_apply(ps, client_apply(pc, batch))
 
+    def pipeline_rest(pc, ps, act, batch, loss_fn, wires):
+        act = sp.record(wires, "cut_act", act, "up")
+        (loss,), vjp_s = jax.vjp(
+            lambda p, a: (loss_fn(server_apply(p, a), batch["labels"]),),
+            ps, sp.as_dense(act))
+        g_s, g_act = vjp_s((jnp.ones(()),))
+        g_act = sp.record(wires, "cut_grad", g_act, "down")
+        return loss, {}, g_s, sp.as_dense(g_act)
+
+    def pipeline_bwd(pc, batch, g_act, g_rest):
+        _, vjp_c = jax.vjp(lambda p: client_apply(p, batch), pc)
+        (g_c,) = vjp_c(g_act)
+        return g_c
+
     return Topology(kind="vanilla", init=init,
                     turn_grads=_drop_wires(turn_grads_wires),
                     turn_grads_wires=turn_grads_wires, evaluate=evaluate,
-                    client_fwd=client_apply)
+                    client_fwd=client_apply,
+                    steps=VANILLA_STEPS, pipeline_fwd=client_apply,
+                    pipeline_rest=pipeline_rest, pipeline_bwd=pipeline_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +275,45 @@ def u_shaped(model: sp.SegModel, cut1: int, cut2: int) -> Topology:
         act = sp._apply_mid(model, ps, act, cut1, cut2)
         return sp._apply_tail(model, pc["tail"], act, cut2)
 
+    def pipeline_fwd(pc, batch):
+        return model.apply_range(pc["head"], batch["x"], 0, cut1)
+
+    def pipeline_rest(pc, ps, act1, batch, loss_fn, wires):
+        act1 = sp.record(wires, "cut_act_1", act1, "up")
+        act2, vjp_mid = jax.vjp(
+            lambda p, a: sp._apply_mid(model, p, a, cut1, cut2), ps,
+            sp.as_dense(act1))
+        act2 = sp.record(wires, "cut_act_2", act2, "down")
+
+        def tail_loss(p, a):
+            return loss_fn(sp._apply_tail(model, p, a, cut2),
+                           batch["labels"])
+
+        loss, (g_tail, g_act2) = jax.value_and_grad(
+            tail_loss, argnums=(0, 1))(pc["tail"], sp.as_dense(act2))
+        g_act2 = sp.record(wires, "cut_grad_2", g_act2, "up")
+        g_mid, g_act1 = vjp_mid(sp.as_dense(g_act2))
+        g_act1 = sp.record(wires, "cut_grad_1", g_act1, "down")
+        return loss, {"tail": g_tail}, g_mid, sp.as_dense(g_act1)
+
+    def pipeline_bwd(pc, batch, g_act1, g_rest):
+        _, vjp_head = jax.vjp(
+            lambda p: model.apply_range(p, batch["x"], 0, cut1),
+            pc["head"])
+        (g_head,) = vjp_head(g_act1)
+        return {"head": g_head, "tail": g_rest["tail"]}
+
+    steps = _turn_steps(
+        ir.ClientFwd(stage="head"),
+        ir.SendCut(name="cut_act_1", direction="up"),
+        ir.ServerFwdBwd(stage="mid"),
+        ir.SendCut(name="cut_act_2", direction="down"),
+        ir.ClientFwd(stage="tail"),
+        ir.ClientBwd(stage="tail"),
+        ir.RecvGrad(name="cut_grad_2", direction="up"),
+        ir.RecvGrad(name="cut_grad_1", direction="down"),
+        ir.ClientBwd(stage="head"))
+
     # client_fwd=None: the eager UShapedTrainer meters no FLOPs for the
     # label-private configuration (the client share is head+tail and the
     # tail fwd needs the mid activation, which a (pc, batch) probe cannot
@@ -148,7 +321,9 @@ def u_shaped(model: sp.SegModel, cut1: int, cut2: int) -> Topology:
     # compute and diverge from the eager reference.
     return Topology(kind="u_shaped", init=init,
                     turn_grads=_drop_wires(turn_grads_wires),
-                    turn_grads_wires=turn_grads_wires, evaluate=evaluate)
+                    turn_grads_wires=turn_grads_wires, evaluate=evaluate,
+                    steps=steps, pipeline_fwd=pipeline_fwd,
+                    pipeline_rest=pipeline_rest, pipeline_bwd=pipeline_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -197,10 +372,14 @@ def vertical(branch: sp.Branch, n_clients: int, trunk_init: Callable,
                  enumerate(_unstack_clients(clients, n_clients))]
         return trunk_apply(ps, jnp.concatenate(feats, axis=-1))
 
+    steps = (_branch_fanin_steps(n_clients)
+             + (ir.ServerFwdBwd(stage="trunk"),)
+             + _branch_fanout_steps(n_clients))
     return Topology(kind="vertical", init=init,
                     turn_grads=None, turn_grads_wires=round_grads_wires,
                     evaluate=evaluate, round_grads=round_grads,
-                    client_fwd=lambda pc, b: branch.apply(pc, b["x"][0]))
+                    client_fwd=lambda pc, b: branch.apply(pc, b["x"][0]),
+                    steps=steps)
 
 
 # ---------------------------------------------------------------------------
@@ -234,11 +413,62 @@ def multihop(model: sp.SegModel, cuts: list[int]) -> Topology:
             act = sp._apply_hop(model, slab, act, bounds[i], bounds[i + 1])
         return act
 
+    def pipeline_fwd(pc, batch):
+        return model.apply_range(pc, batch["x"], 0, cuts[0])
+
+    def pipeline_rest(pc, ps, act, batch, loss_fn, wires):
+        bounds = [0] + cuts + [model.n_segments]
+        act = sp.as_dense(sp.record(wires, "hop_0_act", act, "up"))
+        vjps = []
+        for i in range(1, len(bounds) - 2):      # downstream relay hops
+            lo, hi = bounds[i], bounds[i + 1]
+            act, v = jax.vjp(
+                lambda p, a, lo=lo, hi=hi: sp._apply_hop(model, p, a,
+                                                         lo, hi),
+                ps[i - 1], act)
+            act = sp.as_dense(sp.record(wires, f"hop_{i}_act", act, "up"))
+            vjps.append(v)
+        lo, hi = bounds[-2], bounds[-1]
+
+        def final_loss(p, a):
+            return loss_fn(sp._apply_hop(model, p, a, lo, hi),
+                           batch["labels"])
+
+        loss, (g_last, g_act) = jax.value_and_grad(
+            final_loss, argnums=(0, 1))(ps[-1], act)
+        grads = [g_last]
+        for i in reversed(range(1, len(bounds) - 2)):
+            g_act = sp.record(wires, f"hop_{i}_grad", g_act, "down")
+            g_slab, g_act = vjps[i - 1](sp.as_dense(g_act))
+            grads.append(g_slab)
+        g_act = sp.record(wires, "hop_0_grad", g_act, "down")
+        return loss, {}, tuple(reversed(grads)), sp.as_dense(g_act)
+
+    def pipeline_bwd(pc, batch, g_act, g_rest):
+        _, vjp0 = jax.vjp(lambda p: pipeline_fwd(p, batch), pc)
+        (g_c,) = vjp0(g_act)
+        return g_c
+
+    n_relay = len(cuts) - 1
+    steps = _turn_steps(
+        ir.ClientFwd(stage="hop_0"),
+        ir.SendCut(name="hop_0_act", direction="up"),
+        *[ir.SendCut(name=f"hop_{i}_act", direction="up", owner="server")
+          for i in range(1, n_relay + 1)],
+        ir.ServerFwdBwd(stage="chain"),
+        *[ir.RecvGrad(name=f"hop_{i}_grad", direction="down",
+                      owner="server")
+          for i in reversed(range(1, n_relay + 1))],
+        ir.RecvGrad(name="hop_0_grad", direction="down"),
+        ir.ClientBwd(stage="hop_0"))
+
     return Topology(kind="multihop", init=init,
                     turn_grads=_drop_wires(turn_grads_wires),
                     turn_grads_wires=turn_grads_wires, evaluate=evaluate,
                     client_fwd=lambda pc, b: model.apply_range(
-                        pc, b["x"], 0, cuts[0]))
+                        pc, b["x"], 0, cuts[0]),
+                    steps=steps, pipeline_fwd=pipeline_fwd,
+                    pipeline_rest=pipeline_rest, pipeline_bwd=pipeline_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -280,10 +510,15 @@ def multitask(branch: sp.Branch, n_clients: int,
         # (T, B, C): engine accuracy broadcasts against (T, B) labels
         return jnp.stack([h(p, feats) for h, p in zip(head_applies, ps)])
 
+    steps = (_branch_fanin_steps(n_clients)
+             + (ir.ServerFwdBwd(stage="heads"),
+                ir.Aggregate(what="sum_task_grads"))
+             + _branch_fanout_steps(n_clients))
     return Topology(kind="multitask", init=init,
                     turn_grads=None, turn_grads_wires=round_grads_wires,
                     evaluate=evaluate, round_grads=round_grads,
-                    client_fwd=lambda pc, b: branch.apply(pc, b["x"][0]))
+                    client_fwd=lambda pc, b: branch.apply(pc, b["x"][0]),
+                    steps=steps)
 
 
 # ---------------------------------------------------------------------------
@@ -323,7 +558,15 @@ def extended_vanilla(branch: sp.Branch, n_clients: int,
              enumerate(_unstack_clients(clients, n_clients))], axis=-1)
         return trunk_apply(ps["trunk"], mid_apply(ps["mid"], feats))
 
+    steps = (_branch_fanin_steps(n_clients)
+             + (ir.ClientFwd(stage="mid"),
+                ir.SendCut(name="mid_act", direction="up", owner="mid"),
+                ir.ServerFwdBwd(stage="trunk"),
+                ir.RecvGrad(name="mid_grad", direction="down", owner="mid"),
+                ir.ClientBwd(stage="mid"))
+             + _branch_fanout_steps(n_clients))
     return Topology(kind="extended_vanilla", init=init,
                     turn_grads=None, turn_grads_wires=round_grads_wires,
                     evaluate=evaluate, round_grads=round_grads,
-                    client_fwd=lambda pc, b: branch.apply(pc, b["x"][0]))
+                    client_fwd=lambda pc, b: branch.apply(pc, b["x"][0]),
+                    steps=steps)

@@ -23,6 +23,7 @@ from repro.core import protocol as pr
 from repro.core import split as sp
 from repro.core.wire_compress import wire_bytes
 from repro.data import synthetic as syn
+from repro.engine import stack_state
 from repro.nn import convnets as C
 from repro.nn import layers as L
 
@@ -154,12 +155,12 @@ def test_split_trainer_shim_matches_plan_bit_identical():
     st_shim = shim.init(key)
     # the legacy trainer derives its init key differently; start the Plan
     # session from the identical state so the ROUNDS are compared bitwise
-    sess.state = pr._stack_state(st_shim, 2)
+    sess.state = stack_state(st_shim, 2)
     for r in range(3):
         shards = image_shards(jax.random.fold_in(key, r), 2)
         st_shim, _ = shim.train_round(st_shim, shards)
         sess.run_round(shards)
-    est = pr._stack_state(st_shim, 2)
+    est = stack_state(st_shim, 2)
     tree_equal(est["clients"], sess.state["clients"])
     tree_equal(est["server"], sess.state["server"])
     tree_equal(est["opt_c"], sess.state["opt_c"])

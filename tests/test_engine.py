@@ -18,9 +18,9 @@ from repro import optim
 from repro.core import protocol as pr
 from repro.core import split as sp
 from repro.data import synthetic as syn
-from repro.engine import (RoundEngine, multihop, stack_batches, stack_trees,
-                          topology, u_shaped, unstack_tree, vanilla,
-                          vertical)
+from repro.engine import (RoundEngine, multihop, stack_batches, stack_state,
+                          stack_trees, topology, u_shaped, unstack_tree,
+                          vanilla, vertical)
 from repro.nn import convnets as C
 from repro.nn import layers as L
 
@@ -115,9 +115,15 @@ def test_engine_evaluate_matches_trainer():
     ev = syn.image_batch(jax.random.PRNGKey(9), 32, 4)
     batch = {"x": ev["images"], "labels": ev["labels"]}
     acc_tr = float(tr.evaluate(state, batch))
-    est = pr._stack_state(state, 2)
+    est = stack_state(state, 2)
     acc_en = float(tr.engine.evaluate(est, batch))
     assert acc_tr == acc_en
+    # evaluate_all scores every stack slice at once; identical init +
+    # identical rounds keep both clients' slices in agreement with the
+    # single-slice path here
+    accs = tr.engine.evaluate_all(est, batch)
+    assert accs.shape == (2,)
+    assert float(accs[0]) == acc_tr
 
 
 # ---------------------------------------------------------------------------

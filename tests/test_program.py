@@ -1,0 +1,362 @@
+"""Step-program IR tests.
+
+* golden lowering — every Plan mode emits an exact, locked step
+  sequence; the wire edges carry the billing metadata the meter reads;
+* executor parity — serial / parallel / pipelined(M=1) interpret the
+  same program to the same result (the serial executor is tied to the
+  eager reference in tests/test_engine.py; pipelined is tied to serial
+  here), and pipelined with M>=2 microbatches stays allclose (mean-
+  reduction losses make the microbatch-mean gradient the full-batch
+  gradient);
+* accounting — the pipelined schedule meters exactly what serial does
+  (wire bytes are microbatch-count invariant);
+* evaluate_all — the vmapped whole-fleet eval matches per-client
+  evaluate calls.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.api import MODES, Plan, quantize_int8, softmax_xent
+from repro.core import split as sp
+from repro.data import synthetic as syn
+from repro.engine import (SendCut, RecvGrad, WeightHandoff, lower,
+                          lower_baseline)
+from repro.nn import convnets as C
+from repro.nn import layers as L
+
+CFG = C.CNNConfig(name="t", width_mult=0.25, plan=(16, 16, "M", 32, "M"),
+                  n_classes=4)
+PLAN_LAYERS = C.vgg_plan(CFG)
+N_CLS = 4
+
+
+def make_model():
+    return sp.list_segmodel(
+        n_segments=len(PLAN_LAYERS),
+        init=lambda k: C.vgg_init(k, CFG),
+        layer_apply=lambda p, i, x: C.vgg_layer_apply(p, PLAN_LAYERS[i], x))
+
+
+def make_branch(din=64, dout=16):
+    return sp.Branch(
+        init=lambda k: {"w": L.dense_init(k, din, dout, bias=True)},
+        apply=lambda p, x: jax.nn.relu(L.dense_apply(p["w"], x)))
+
+
+def _dense(k_in, k_out):
+    init = lambda k: {"w": L.dense_init(k, k_in, k_out, bias=True)}
+    apply = lambda p, f: L.dense_apply(p["w"], f)
+    return init, apply
+
+
+def _plan_for(mode, **over):
+    common = dict(loss_fn=softmax_xent, optimizer=optim.sgd(0.05, 0.9),
+                  n_clients=2)
+    common.update(over)
+    if mode == "vanilla":
+        return Plan(mode=mode, model=make_model(), cut=2, **common)
+    if mode == "u_shaped":
+        return Plan(mode=mode, model=make_model(), cuts=(1, 4), **common)
+    if mode == "multihop":
+        return Plan(mode=mode, model=make_model(), cuts=[1, 3], **common)
+    if mode == "vertical":
+        return Plan(mode=mode, branch=make_branch(),
+                    trunk=_dense(32, N_CLS), **common)
+    if mode == "multitask":
+        return Plan(mode=mode, branch=make_branch(),
+                    heads=(_dense(32, N_CLS), _dense(32, N_CLS)), **common)
+    if mode == "extended_vanilla":
+        return Plan(mode=mode, branch=make_branch(), mid=_dense(32, 24),
+                    trunk=_dense(24, N_CLS), **common)
+    if mode == "fedavg":
+        return Plan(mode=mode, model=make_model(), local_steps=2, **common)
+    return Plan(mode="large_batch", model=make_model(), **common)
+
+
+def _program_for(mode, **over):
+    return _plan_for(mode, **over).compile().engine.program
+
+
+def image_shards(key, n, per=16):
+    b = syn.image_batch(key, per * n, N_CLS)
+    return [{"x": b["images"][i * per:(i + 1) * per],
+             "labels": b["labels"][i * per:(i + 1) * per]}
+            for i in range(n)]
+
+
+def modal_batch(key, per_task_labels=False):
+    b = syn.multimodal_batch(key, 32, N_CLS, dim_a=64, dim_b=64)
+    labels = b["labels"]
+    if per_task_labels:
+        labels = jnp.stack([labels, (labels + 1) % N_CLS])
+    return {"x": jnp.stack([b["mod_a"], b["mod_b"]]), "labels": labels}
+
+
+def _round_data(mode, key, r):
+    k = jax.random.fold_in(key, r)
+    if mode == "multitask":
+        return modal_batch(k, per_task_labels=True)
+    if mode in ("vertical", "extended_vanilla"):
+        return modal_batch(k)
+    return image_shards(k, 2)
+
+
+def tree_close(a, b, atol=1e-6):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# golden lowering: the emitted step sequence per mode, locked exactly
+# ---------------------------------------------------------------------------
+
+GOLDEN = {
+    "vanilla": (
+        "WeightHandoff(when='sync=p2p')",
+        "ClientFwd", "SendCut", "ServerFwdBwd", "RecvGrad", "ClientBwd",
+        "Aggregate"),
+    "u_shaped": (
+        "WeightHandoff(when='sync=p2p')",
+        "ClientFwd(stage='head')",
+        "SendCut(name='cut_act_1')",
+        "ServerFwdBwd(stage='mid')",
+        "SendCut(name='cut_act_2', direction='down')",
+        "ClientFwd(stage='tail')",
+        "ClientBwd(stage='tail')",
+        "RecvGrad(name='cut_grad_2', direction='up')",
+        "RecvGrad(name='cut_grad_1')",
+        "ClientBwd(stage='head')",
+        "Aggregate"),
+    "multihop": (
+        "WeightHandoff(when='sync=p2p')",
+        "ClientFwd(stage='hop_0')",
+        "SendCut(name='hop_0_act')",
+        "SendCut(name='hop_1_act', owner='server')",
+        "ServerFwdBwd(stage='chain')",
+        "RecvGrad(name='hop_1_grad', owner='server')",
+        "RecvGrad(name='hop_0_grad')",
+        "ClientBwd(stage='hop_0')",
+        "Aggregate"),
+    "vertical": (
+        "ClientFwd(stage='branch_0', client=0)",
+        "SendCut(name='branch_0_act', client=0)",
+        "ClientFwd(stage='branch_1', client=1)",
+        "SendCut(name='branch_1_act', client=1)",
+        "Aggregate(what='concat_features')",
+        "ServerFwdBwd(stage='trunk')",
+        "RecvGrad(name='branch_0_grad', client=0)",
+        "ClientBwd(stage='branch_0', client=0)",
+        "RecvGrad(name='branch_1_grad', client=1)",
+        "ClientBwd(stage='branch_1', client=1)",
+        "Aggregate"),
+    "multitask": (
+        "ClientFwd(stage='branch_0', client=0)",
+        "SendCut(name='branch_0_act', client=0)",
+        "ClientFwd(stage='branch_1', client=1)",
+        "SendCut(name='branch_1_act', client=1)",
+        "Aggregate(what='concat_features')",
+        "ServerFwdBwd(stage='heads')",
+        "Aggregate(what='sum_task_grads')",
+        "RecvGrad(name='branch_0_grad', client=0)",
+        "ClientBwd(stage='branch_0', client=0)",
+        "RecvGrad(name='branch_1_grad', client=1)",
+        "ClientBwd(stage='branch_1', client=1)",
+        "Aggregate"),
+    "extended_vanilla": (
+        "ClientFwd(stage='branch_0', client=0)",
+        "SendCut(name='branch_0_act', client=0)",
+        "ClientFwd(stage='branch_1', client=1)",
+        "SendCut(name='branch_1_act', client=1)",
+        "Aggregate(what='concat_features')",
+        "ClientFwd(stage='mid')",
+        "SendCut(name='mid_act', owner='mid')",
+        "ServerFwdBwd(stage='trunk')",
+        "RecvGrad(name='mid_grad', owner='mid')",
+        "ClientBwd(stage='mid')",
+        "Aggregate"),
+    "fedavg": (
+        "WeightHandoff(name='model_pull', direction='down')",
+        "ClientFwd(stage='local', repeats=2)",
+        "ClientBwd(stage='local')",
+        "WeightHandoff(name='model_push', direction='up')",
+        "Aggregate(what='mean_models')"),
+    "large_batch": (
+        "WeightHandoff(name='model_pull', direction='down')",
+        "ClientFwd(stage='full')",
+        "ClientBwd(stage='full')",
+        "WeightHandoff(name='grad_push', direction='up')",
+        "Aggregate(what='mean_grads')"),
+}
+GOLDEN["extended_vanilla"] = GOLDEN["extended_vanilla"][:-1] + (
+    "RecvGrad(name='branch_0_grad', client=0)",
+    "ClientBwd(stage='branch_0', client=0)",
+    "RecvGrad(name='branch_1_grad', client=1)",
+    "ClientBwd(stage='branch_1', client=1)",
+    "Aggregate")
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_lowering_emits_the_golden_step_sequence(mode):
+    prog = _program_for(mode)
+    assert prog.kind == mode
+    assert prog.describe() == GOLDEN[mode], "\n".join(prog.describe())
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_every_mode_round_type_and_wire_edges(mode):
+    prog = _program_for(mode)
+    if mode in ("vertical", "multitask", "extended_vanilla"):
+        assert prog.round_type == "branch"
+    elif mode in ("fedavg", "large_batch"):
+        assert prog.round_type == mode
+    else:
+        assert prog.round_type == "turn"
+    # every wire step is typed and carries a direction
+    for s in prog.wire_steps():
+        assert isinstance(s, (SendCut, RecvGrad))
+        assert s.direction in ("up", "down")
+    for s in prog.handoff_steps():
+        assert isinstance(s, WeightHandoff)
+
+
+def test_billing_metadata_matches_the_old_kind_dispatch():
+    """The per-client billed wire names the meter reads off the IR."""
+    assert _program_for("vanilla").billed_wires(0) == ("cut_act",
+                                                      "cut_grad")
+    assert _program_for("u_shaped").billed_wires(1) == (
+        "cut_act_1", "cut_act_2", "cut_grad_2", "cut_grad_1")
+    # multihop: the data client pays only for the FIRST hop's wire
+    assert _program_for("multihop").billed_wires(0) == ("hop_0_act",
+                                                       "hop_0_grad")
+    # branch kinds: client i pays only for ITS branch; the intermediate
+    # client's mid wires are unbilled
+    ext = _program_for("extended_vanilla")
+    assert ext.billed_wires(0) == ("branch_0_act", "branch_0_grad")
+    assert ext.billed_wires(1) == ("branch_1_act", "branch_1_grad")
+
+
+def test_lower_is_reachable_without_a_plan():
+    """`lower`/`lower_baseline` are the public lowering entry points."""
+    from repro.engine import topology as topo
+    prog = lower(topo.vanilla(make_model(), 2))
+    assert prog.describe() == GOLDEN["vanilla"]
+    assert lower_baseline("fedavg", local_steps=2).describe() == \
+        GOLDEN["fedavg"]
+    with pytest.raises(ValueError, match="unknown baseline"):
+        lower_baseline("bogus")
+
+
+# ---------------------------------------------------------------------------
+# executor parity: one program, interchangeable interpreters
+# ---------------------------------------------------------------------------
+
+def _fit(mode, rounds=3, **over):
+    sess = _plan_for(mode, **over).compile()
+    key = jax.random.PRNGKey(0)
+    sess.init(key)
+    losses = sess.fit(lambda r: _round_data(mode, key, r), rounds=rounds)
+    return sess, losses
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_pipelined_m1_matches_the_reference_executor(mode):
+    """pipelined(M=1) == the mode's default executor (serial scan for
+    turn kinds, the vmapped parallel/baseline round otherwise), which
+    tests/test_engine.py and tests/test_api.py tie to the eager
+    reference."""
+    ref, losses_ref = _fit(mode)
+    pip, losses_pip = _fit(mode, schedule="pipelined", microbatches=1)
+    np.testing.assert_allclose(losses_pip, losses_ref, atol=1e-6)
+    tree_close(pip.state, ref.state)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_pipelined_m2_stays_allclose(mode):
+    """M=2 microbatches: same math in exact arithmetic (mean-reduction
+    loss), so a short run stays allclose to the reference executor —
+    which test_api.py ties to a decreasing loss for every mode."""
+    ref, losses_ref = _fit(mode, rounds=5)
+    pip, losses_pip = _fit(mode, rounds=5, schedule="pipelined",
+                           microbatches=2)
+    np.testing.assert_allclose(losses_pip, losses_ref, atol=5e-4)
+    # momentum amplifies the fp reassociation of the microbatch-mean
+    # gradient over rounds (fedavg: x local_steps) — loose state atol
+    tree_close(pip.state, ref.state, atol=2e-2)
+
+
+def test_pipelined_meters_exactly_like_serial():
+    """Wire bytes are microbatch-count invariant (M acts of B/M rows
+    carry the same payload as one act of B rows), and the p2p handoff
+    is still per turn — the analytic meters must agree EXACTLY."""
+    ref, _ = _fit("vanilla", rounds=2)
+    pip, _ = _fit("vanilla", rounds=2, schedule="pipelined",
+                  microbatches=2)
+    a, b = ref.engine.meter, pip.engine.meter
+    assert (a.flops, a.bytes_up, a.bytes_down, a.sync_bytes) == \
+        (b.flops, b.bytes_up, b.bytes_down, b.sync_bytes)
+    assert sum(b.sync_bytes) > 0       # p2p handoffs still metered
+
+
+def test_pipelined_crosses_the_wire_middleware():
+    """quantize_int8 applies inside the staged pipeline too: pipelined
+    M=1 matches serial bitwise-ish under the same stack, and the
+    metered bytes stay the quantized counts."""
+    wire = (quantize_int8(),)
+    ref, losses_ref = _fit("vanilla", rounds=3, wire=wire)
+    pip, losses_pip = _fit("vanilla", rounds=3, wire=wire,
+                           schedule="pipelined", microbatches=2)
+    np.testing.assert_allclose(losses_pip, losses_ref, atol=5e-4)
+    assert pip.engine.meter.bytes_up == ref.engine.meter.bytes_up
+    dense = _fit("vanilla", rounds=3)[0]
+    assert all(w < d for w, d in zip(pip.engine.meter.bytes_up,
+                                     dense.engine.meter.bytes_up))
+
+
+def test_pipelined_requires_divisible_batch():
+    sess = _plan_for("vanilla", schedule="pipelined",
+                     microbatches=3).compile()
+    key = jax.random.PRNGKey(0)
+    sess.init(key)
+    with pytest.raises(ValueError, match="divide evenly"):
+        sess.fit(lambda r: image_shards(key, 2), rounds=1)
+
+
+def test_plan_validates_pipelined_knobs():
+    with pytest.raises(ValueError, match="requires schedule='pipelined'"):
+        _plan_for("vanilla", microbatches=2).compile()
+    with pytest.raises(ValueError, match="microbatches must be >= 1"):
+        _plan_for("vanilla", schedule="pipelined",
+                  microbatches=0).compile()
+    from repro.api import FleetSpec
+    with pytest.raises(ValueError, match="single-mesh"):
+        _plan_for("vanilla", schedule="pipelined", microbatches=2,
+                  fleet=FleetSpec(n_devices=1)).compile()
+    # "serial" is accepted as the IR name for round_robin
+    sess = _plan_for("vanilla", schedule="serial").compile()
+    assert sess.engine.schedule == "round_robin"
+
+
+# ---------------------------------------------------------------------------
+# evaluate_all
+# ---------------------------------------------------------------------------
+
+def test_evaluate_all_matches_per_client_evaluate():
+    sess, _ = _fit("vanilla", rounds=3, schedule="parallel")
+    batch = image_shards(jax.random.PRNGKey(9), 2)[0]
+    accs = sess.evaluate_all(batch)
+    assert accs.shape == (2,)
+    for ci in range(2):
+        assert float(accs[ci]) == float(sess.evaluate(batch, client=ci))
+
+
+def test_evaluate_all_shapes_for_branch_and_baseline():
+    sess, _ = _fit("vertical", rounds=2)
+    accs = sess.evaluate_all(modal_batch(jax.random.PRNGKey(3)))
+    assert accs.shape == (1,)
+    sess, _ = _fit("fedavg", rounds=2)
+    accs = sess.evaluate_all(image_shards(jax.random.PRNGKey(3), 2)[0])
+    assert accs.shape == (1,)
