@@ -1,0 +1,151 @@
+"""Serving bench: decode throughput + wire bytes/token across modes.
+
+Four serving variants of the same arch (greedy decode, B batch rows):
+
+    loop       — monolithic, per-token Python-loop decode (one jitted
+                 dispatch per token): the baseline the scan replaces
+    scan       — monolithic, whole generation in ONE `lax.scan` dispatch
+    split_fp32 — `serve.ServeSession`, fp32 cut wire (dense activations
+                 up, dense logits down)
+    split_q8   — the physical packed-int8 wire: int8 payload + fp32 row
+                 scales on BOTH hops, bytes metered from the actual
+                 packed leaf dtypes (`TurnCost`)
+
+All timings exclude compilation (warmup + `block_until_ready` fences).
+Writes `BENCH_serve.json` at the repo root; CI reruns a reduced version
+and `check_regression.py` gates `decode_tok_per_s` (direction=higher,
+20%) and `wire_bytes_per_token` (direction=lower, 5%) against the
+committed baseline.  The headline derived metrics:
+
+    scan_speedup_vs_loop        — must stay > 1 (the tentpole perf win)
+    wire_reduction_q8_vs_fp32   — must stay >= 3 (packed-wire promise)
+
+Usage:  PYTHONPATH=src python benchmarks/serve_bench.py \
+            [--arch phi4_mini_3_8b] [--batch 4] [--prompt-len 16]
+            [--gen 64] [--repeats 3] [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _time_decode(fn, repeats: int) -> float:
+    """Median wall seconds of fn() (already warmed up/compiled)."""
+    import jax
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def bench_monolithic(model, params, prompt, gen, max_len, repeats, *,
+                     loop: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.serve import greedy_decode_loop
+    from repro.serve import greedy_decode_scan
+
+    B = prompt.shape[0]
+
+    @jax.jit
+    def prefill(params, prompt):
+        cache = model.init_cache(B, max_len)
+        logits, cache = model.prefill(params, {"tokens": prompt}, cache)
+        return jnp.argmax(logits[:, -1], axis=-1)[:, None], cache
+
+    if loop:
+        decode = lambda c, t: greedy_decode_loop(model, params, c, t, gen)
+    else:
+        decode = jax.jit(lambda c, t: greedy_decode_scan(model, params, c,
+                                                         t, gen))
+
+    tok0, cache = prefill(params, prompt)
+    jax.block_until_ready(decode(cache, tok0))       # warmup / compile
+    dt = _time_decode(lambda: decode(cache, tok0)[0], repeats)
+    return {"decode_tok_per_s": round(B * gen / dt, 1),
+            "decode_s": round(dt, 4),
+            "wire_bytes_per_token": 0}
+
+
+def bench_split(cfg, params, prompt, gen, max_len, repeats, wire) -> dict:
+    import jax
+    from repro.serve import ServePlan, ServeSession
+
+    B = prompt.shape[0]
+    sess = ServeSession(ServePlan(arch=cfg, max_batch=B, max_len=max_len,
+                                  wire=wire), params)
+    jax.block_until_ready(sess.generate(prompt, gen + 1))  # warmup
+    tok0 = sess.prefill(prompt)
+    jax.block_until_ready(tok0)
+    dt = _time_decode(lambda: sess.decode(tok0, gen), repeats)
+    cost = sess.decode_cost(batch=B)
+    return {"decode_tok_per_s": round(B * gen / dt, 1),
+            "decode_s": round(dt, 4),
+            "wire_bytes_per_token": round((cost.bytes_up + cost.bytes_down)
+                                          / B)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4_mini_3_8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_serve.json"))
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config(args.arch).reduced(vocab=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.gen + 2
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    modes = {}
+    modes["loop"] = bench_monolithic(model, params, prompt, args.gen,
+                                     max_len, args.repeats, loop=True)
+    modes["scan"] = bench_monolithic(model, params, prompt, args.gen,
+                                     max_len, args.repeats, loop=False)
+    modes["split_fp32"] = bench_split(cfg, params, prompt, args.gen,
+                                      max_len, args.repeats, "")
+    modes["split_q8"] = bench_split(cfg, params, prompt, args.gen, max_len,
+                                    args.repeats, "quantize_int8:physical")
+    for name, r in modes.items():
+        print(f"{name:11s} {r['decode_tok_per_s']:9.1f} tok/s  "
+              f"{r['wire_bytes_per_token']:6d} wire B/tok")
+
+    payload = {
+        "bench": "serve", "arch": cfg.name, "batch": args.batch,
+        "prompt_len": args.prompt_len, "gen": args.gen,
+        "cores": os.cpu_count(),
+        "modes": modes,
+        "scan_speedup_vs_loop": round(
+            modes["scan"]["decode_tok_per_s"]
+            / modes["loop"]["decode_tok_per_s"], 2),
+        "wire_reduction_q8_vs_fp32": round(
+            modes["split_fp32"]["wire_bytes_per_token"]
+            / modes["split_q8"]["wire_bytes_per_token"], 2),
+    }
+    print(f"scan vs loop: {payload['scan_speedup_vs_loop']:.2f}x "
+          f"(target > 1); q8 wire reduction: "
+          f"{payload['wire_reduction_q8_vs_fp32']:.2f}x (target >= 3)")
+    pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

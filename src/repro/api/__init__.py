@@ -22,14 +22,14 @@ from repro.api.plan import (BASELINE_MODES, BRANCH_MODES, MODES, FullFns,
                             softmax_xent)
 from repro.api.session import Session
 from repro.api.wire import (WireAccountingError, WireStack, WireTransform,
-                            dp_noise, leakage_probe, quantize_int8,
-                            with_wire)
+                            dp_noise, leakage_probe, parse_wire,
+                            quantize_int8, with_wire)
 from repro.engine.fleet import FleetRoundEngine, FleetSpec
 
 __all__ = ["Plan", "Session", "SplitFns", "FullFns", "lm_split_fns",
            "softmax_xent", "MODES", "SPLIT_MODES", "BASELINE_MODES",
            "BRANCH_MODES", "WireTransform", "WireStack",
            "WireAccountingError", "quantize_int8", "dp_noise",
-           "leakage_probe", "with_wire", "FedAvgEngine",
+           "leakage_probe", "parse_wire", "with_wire", "FedAvgEngine",
            "LargeBatchEngine", "FleetSpec", "FleetRoundEngine",
            "FleetFedAvgEngine", "FleetLargeBatchEngine"]

@@ -130,6 +130,37 @@ def leakage_probe() -> WireTransform:
                          bytes_fn=_identity_bytes, probe=True)
 
 
+def parse_wire(spec) -> tuple:
+    """'quantize_int8,dp_noise:0.05,leakage_probe' -> transform tuple.
+    `quantize_int8:physical` routes through the fused Pallas pack/dequant
+    kernels — the in-graph wire value is the packed int8 payload.
+
+    Shared by the training driver (`launch.train`) and the serving
+    engine (`serve.split_infer`): one wire grammar for both directions
+    of the protocol.  Also accepts an already-built stack/sequence of
+    `WireTransform`s (passed through) or None (empty stack)."""
+    if spec is None:
+        return ()
+    if isinstance(spec, WireStack):
+        return spec.transforms
+    if not isinstance(spec, str):
+        return tuple(spec)
+    out = []
+    for tok in filter(None, spec.split(",")):
+        name, _, arg = tok.partition(":")
+        if name == "quantize_int8":
+            if arg not in ("", "physical", "fake"):
+                raise ValueError(f"quantize_int8:{arg}? (physical|fake)")
+            out.append(quantize_int8(physical=arg == "physical"))
+        elif name == "dp_noise":
+            out.append(dp_noise(float(arg or 0.05)))
+        elif name == "leakage_probe":
+            out.append(leakage_probe())
+        else:
+            raise ValueError(f"unknown wire transform {name!r}")
+    return tuple(out)
+
+
 # ---------------------------------------------------------------------------
 # stack + tape
 # ---------------------------------------------------------------------------

@@ -148,6 +148,20 @@ def payload_nbytes(t) -> int:
     return total
 
 
+def stack_packed(parts: list, axis: int = 0):
+    """Concatenate wire payloads along a batch axis — the serving
+    batcher packs N tenants' cut activations into one server step.
+    Valid for PackedInt8 because quantization is per-LAST-axis-row:
+    batch concat never mixes rows, so the stacked payload is bitwise the
+    per-tenant payloads.  Dense payloads concat as plain tensors."""
+    if all(isinstance(p, PackedInt8) for p in parts):
+        return PackedInt8(
+            jnp.concatenate([p.q for p in parts], axis=axis),
+            jnp.concatenate([p.scale for p in parts], axis=axis),
+            parts[0].orig_dtype)
+    return jnp.concatenate([as_dense(p) for p in parts], axis=axis)
+
+
 def splitcat_linear_packed(parts: list, w, b=None, out_dtype=None):
     """Server entry layer over a list of wire payloads: packed parts go
     through the fused dequant+concat+matmul q8 kernel (the fp32

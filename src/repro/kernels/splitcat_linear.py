@@ -82,7 +82,15 @@ def splitcat_linear_q8_pallas(qs: list, scales: list, w, b=None, *,
     R = rows + pad_r
     C = w.shape[-1]
     bc = min(block_c, C)
-    assert C % bc == 0, f"d_out {C} % {bc}"
+    # decode-shaped payloads hit arbitrary d_out (fused QKV widths, odd
+    # vocab sizes): pad the weight columns to a tile multiple and slice
+    # the output back — zero columns produce zero output, no renorm needed
+    pad_c = (-C) % bc
+    if pad_c:
+        w = jnp.pad(w, ((0, 0), (0, pad_c)))
+        if b is not None:
+            b = jnp.pad(b, (0, pad_c))
+    Cp = C + pad_c
 
     ws, off = [], 0
     for q in qs2:
@@ -101,19 +109,19 @@ def splitcat_linear_q8_pallas(qs: list, scales: list, w, b=None, *,
     args = qs2 + ss2 + ws
     if b is not None:
         in_specs.append(pl.BlockSpec((1, bc), lambda i, j: (0, j)))
-        args.append(b.reshape(1, C))
+        args.append(b.reshape(1, Cp))
 
     out = pl.pallas_call(
         functools.partial(_splitcat_q8_kernel, n_parts=n,
                           has_bias=b is not None),
-        grid=(R // block_r, C // bc),
+        grid=(R // block_r, Cp // bc),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_r, bc), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((R, C), jnp.dtype(out_dtype)),
+        out_shape=jax.ShapeDtypeStruct((R, Cp), jnp.dtype(out_dtype)),
         interpret=interpret,
     )(*args)
-    if pad_r:
-        out = out[:rows]
+    if pad_r or pad_c:
+        out = out[:rows, :C]
     return out.reshape(*lead, C)
 
 
@@ -132,7 +140,12 @@ def splitcat_linear_pallas(parts: list, w, b=None, *, block_r: int = 128,
     R = rows + pad_r
     C = w.shape[-1]
     bc = min(block_c, C)
-    assert C % bc == 0, f"d_out {C} % {bc}"
+    pad_c = (-C) % bc                 # see splitcat_linear_q8_pallas
+    if pad_c:
+        w = jnp.pad(w, ((0, 0), (0, pad_c)))
+        if b is not None:
+            b = jnp.pad(b, (0, pad_c))
+    Cp = C + pad_c
 
     # row-split W at the modality boundaries
     ws, off = [], 0
@@ -150,17 +163,17 @@ def splitcat_linear_pallas(parts: list, w, b=None, *, block_r: int = 128,
     args = list(parts2) + ws
     if b is not None:
         in_specs.append(pl.BlockSpec((1, bc), lambda i, j: (0, j)))
-        args.append(b.reshape(1, C))
+        args.append(b.reshape(1, Cp))
 
     out = pl.pallas_call(
         functools.partial(_splitcat_kernel, n_parts=n,
                           has_bias=b is not None),
-        grid=(R // block_r, C // bc),
+        grid=(R // block_r, Cp // bc),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_r, bc), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((R, C), parts[0].dtype),
+        out_shape=jax.ShapeDtypeStruct((R, Cp), parts[0].dtype),
         interpret=interpret,
     )(*args)
-    if pad_r:
-        out = out[:rows]
+    if pad_r or pad_c:
+        out = out[:rows, :C]
     return out.reshape(*lead, C)

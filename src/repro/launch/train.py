@@ -33,8 +33,7 @@ import jax
 
 from repro import checkpoint as ckpt
 from repro import optim
-from repro.api import (FleetSpec, Plan, dp_noise, leakage_probe,
-                       lm_split_fns, quantize_int8, FullFns)
+from repro.api import FleetSpec, FullFns, Plan, lm_split_fns
 from repro.configs import get_config
 from repro.data import synthetic as syn
 from repro.engine import tree_index
@@ -54,24 +53,9 @@ def make_batch_fn(cfg, batch, seq):
     return fn
 
 
-def parse_wire(spec: str):
-    """'quantize_int8,dp_noise:0.05,leakage_probe' -> transform stack.
-    `quantize_int8:physical` routes through the fused Pallas pack/dequant
-    kernels — the in-graph wire value is the packed int8 payload."""
-    out = []
-    for tok in filter(None, spec.split(",")):
-        name, _, arg = tok.partition(":")
-        if name == "quantize_int8":
-            if arg not in ("", "physical", "fake"):
-                raise SystemExit(f"quantize_int8:{arg}? (physical|fake)")
-            out.append(quantize_int8(physical=arg == "physical"))
-        elif name == "dp_noise":
-            out.append(dp_noise(float(arg or 0.05)))
-        elif name == "leakage_probe":
-            out.append(leakage_probe())
-        else:
-            raise SystemExit(f"unknown wire transform {name!r}")
-    return tuple(out)
+# parse_wire moved to the api layer so the serving engine shares the one
+# wire grammar; re-exported here for back-compat (benchmarks import it).
+from repro.api.wire import parse_wire  # noqa: E402,F401
 
 
 def build_plan(model, args) -> Plan:
@@ -108,11 +92,15 @@ def build_plan(model, args) -> Plan:
             "vanilla cut only (apply_client/apply_server).  Other "
             "topologies build a repro.api.Plan over a SegModel or Branch "
             "directly — see README and tests/test_api.py.")
+    try:
+        wire = parse_wire(args.wire)
+    except ValueError as e:
+        raise SystemExit(str(e))
     return Plan(mode="vanilla", model=lm_split_fns(model, args.cut),
                 cut=args.cut, n_clients=args.n_clients,
                 schedule=args.schedule, microbatches=args.microbatches,
                 optimizer=opt,
-                wire=parse_wire(args.wire), fleet=fleet,
+                wire=wire, fleet=fleet,
                 clip_norm=1.0 if args.n_clients == 1 else None)
 
 

@@ -153,6 +153,50 @@ class EncDec:
         return {"cross": cross, "self": self_kv,
                 "pos": jnp.zeros((), jnp.int32)}
 
+    def prefill(self, params, tokens, cache):
+        """ONE compiled teacher-forced decoder pass that fills the
+        self-attn KV rings (replaces the O(S) decode_step python loop,
+        which wasn't even jitted).  `cache` must be fresh (pos == 0).
+        Returns (logits (B, S, V), cache)."""
+        cfg = self.cfg
+        ac = self._dec_attn_cfg()
+        B, Sn = tokens.shape
+        x = L.embedding_apply(params["embed"], tokens)
+        x = x + sinusoidal_positions(Sn, cfg.d_model).astype(x.dtype)
+        mask = A.causal_mask(Sn, Sn)
+        scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+
+        def body(h, inp):
+            p, cross_kv, k_cache, v_cache = inp
+            hn = L.layernorm_apply(p["norm1"], h)
+            q = L.dense_apply(p["self_attn"]["wq"], hn).reshape(
+                B, Sn, cfg.n_heads, cfg.resolved_head_dim)
+            k = L.dense_apply(p["self_attn"]["wk"], hn).reshape(
+                B, Sn, cfg.n_kv_heads, cfg.resolved_head_dim)
+            v = L.dense_apply(p["self_attn"]["wv"], hn).reshape(
+                B, Sn, cfg.n_kv_heads, cfg.resolved_head_dim)
+            k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, 0, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, 0, 0, 0))
+            att = A.grouped_attention(q, k, v, mask, scale=scale)
+            h = h + L.dense_apply(p["self_attn"]["wo"],
+                                  att.reshape(B, Sn, -1))
+            h = h + A.cross_attn_apply(
+                p["cross_attn"], ac, L.layernorm_apply(p["norm2"], h),
+                cross_kv)
+            h = h + L.gelu_mlp_apply(p["mlp"],
+                                     L.layernorm_apply(p["norm3"], h))
+            return h, (k_cache, v_cache)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["cross"],
+                      cache["self"]["k"], cache["self"]["v"]))
+        x = L.layernorm_apply(params["dec_norm"], x)
+        logits = L.embedding_attend(params["embed"], x)
+        new_cache = {"cross": cache["cross"],
+                     "self": {"k": new_k, "v": new_v},
+                     "pos": cache["pos"] + Sn}
+        return logits, new_cache
+
     def decode_step(self, params, tokens, cache):
         """tokens: (B,1)."""
         cfg = self.cfg

@@ -177,6 +177,46 @@ def group_decode(params, g: GroupSpec, x, caches):
     return out, new
 
 
+def group_prefill(params, g: GroupSpec, x, caches):
+    """Full-sequence forward through one scan group that also populates
+    its decode caches (the compiled-prefill analogue of group_decode)."""
+    if g.layers_per_repeat == 1:
+        def body1(h, pc):
+            lp, c = pc
+            h, nc = T.block_prefill(lp, g.specs[0], h, c)
+            return h, nc
+        out, new = jax.lax.scan(body1, x, (params["0"], caches["0"]))
+        return out, {"0": new}
+
+    def body(h, pc):
+        layer_params, cache = pc
+        new_cache = {}
+        for i, spec in enumerate(g.specs):
+            h, new_cache[str(i)] = T.block_prefill(
+                layer_params[str(i)], spec, h, cache[str(i)])
+        return h, new_cache
+
+    out, new = jax.lax.scan(body, x, (params, caches))
+    return out, new
+
+
+def per_slot_pos(caches, batch: int):
+    """Broadcast every scalar `pos` cursor leaf in a cache tree to a
+    per-row vector with a trailing (batch,) axis — the layout the
+    multi-tenant serving batcher uses so each stacked slot advances its
+    own position independently (see gqa_decode).  Recurrent caches
+    (mamba2/rglru) carry no cursor and pass through unchanged."""
+    def walk(t):
+        if isinstance(t, dict):
+            return {k: (jnp.broadcast_to(v[..., None], v.shape + (batch,))
+                        if k == "pos" else walk(v))
+                    for k, v in t.items()}
+        if isinstance(t, list):
+            return [walk(v) for v in t]
+        return t
+    return walk(caches)
+
+
 # ---------------------------------------------------------------------------
 # The LM
 # ---------------------------------------------------------------------------
@@ -247,10 +287,20 @@ class LM:
     def init_cache(self, batch: int, max_len: int):
         return [group_init_cache(g, batch, max_len) for g in self.groups]
 
-    def prefill_into_cache(self, params, batch, caches):
-        """Sequential prefill via decode steps (reference path; the fast
-        path is `forward` + cache scatter, used by serve.py)."""
-        raise NotImplementedError("use forward() for prefill")
+    def prefill(self, params, batch, caches):
+        """ONE compiled teacher-forced forward that populates `caches`
+        (replaces the O(prompt_len) decode_step dispatch loop).  Returns
+        (logits (B, S, V), caches) — logits[:, -1] feeds the first
+        sampled token."""
+        x = self.embed(params, batch)
+        new_caches = []
+        for g, gp, c in zip(self.groups, params["groups"], caches):
+            x, nc = group_prefill(gp, g, x, c)
+            new_caches.append(nc)
+        logits = self.head(params, x)
+        if self.cfg.family == "vlm":
+            logits = logits[:, self.cfg.n_patches:]
+        return logits, new_caches
 
     def decode_step(self, params, tokens, caches):
         """tokens: (B, 1) -> logits (B, 1, V), new caches."""
@@ -327,18 +377,79 @@ class LM:
             x = group_apply(gp, g, x, remat=remat)
         return x
 
-    def apply_server(self, server_params, act, cut: int, *,
-                     remat: bool = False):
-        x = act
-        for g, gp in zip(self._groups_for_range(cut, "server"),
-                         server_params["groups"]):
-            x = group_apply(gp, g, x, remat=remat)
+    def server_head(self, server_params, x):
+        """Final norm + unembedding on the server side of a split."""
         x = (L.rmsnorm_apply(server_params["final_norm"], x)
              if self.cfg.norm == "rmsnorm"
              else L.layernorm_apply(server_params["final_norm"], x))
         if "head" in server_params:
             return L.dense_apply(server_params["head"], x)
         return L.embedding_attend(server_params["tied_head"], x)
+
+    def apply_server(self, server_params, act, cut: int, *,
+                     remat: bool = False):
+        x = act
+        for g, gp in zip(self._groups_for_range(cut, "server"),
+                         server_params["groups"]):
+            x = group_apply(gp, g, x, remat=remat)
+        return self.server_head(server_params, x)
+
+    # ---- split serving (each half owns its own caches) ----
+    def init_cache_split(self, batch: int, max_len: int, cut: int):
+        """(client_caches, server_caches) for the layer ranges [0, cut)
+        and [cut, L) — each side's decode runs against only its own
+        caches, so no KV state ever crosses the wire."""
+        client = [group_init_cache(g, batch, max_len)
+                  for g in self._groups_for_range(cut, "client")]
+        server = [group_init_cache(g, batch, max_len)
+                  for g in self._groups_for_range(cut, "server")]
+        return client, server
+
+    def prefill_client(self, client_params, batch, cut: int, caches):
+        """Compiled teacher-forced client half: embed + layers [0, cut).
+        Returns (cut activation (B, S, D), caches)."""
+        x = self.embed(client_params, batch)
+        new_caches = []
+        for g, gp, c in zip(self._groups_for_range(cut, "client"),
+                            client_params["groups"], caches):
+            x, nc = group_prefill(gp, g, x, c)
+            new_caches.append(nc)
+        return x, new_caches
+
+    def prefill_server(self, server_params, act, cut: int, caches):
+        """Compiled teacher-forced server half over the cut activation.
+        Returns (logits (B, S, V), caches)."""
+        x = act
+        new_caches = []
+        for g, gp, c in zip(self._groups_for_range(cut, "server"),
+                            server_params["groups"], caches):
+            x, nc = group_prefill(gp, g, x, c)
+            new_caches.append(nc)
+        logits = self.server_head(server_params, x)
+        if self.cfg.family == "vlm":
+            logits = logits[:, self.cfg.n_patches:]
+        return logits, new_caches
+
+    def decode_step_client(self, client_params, tokens, cut: int, caches):
+        """tokens (B, 1) -> (cut activation (B, 1, D), caches).  Token
+        embedding only — a VLM's patches entered at prefill time."""
+        x = L.embedding_apply(client_params["embed"], tokens)
+        new_caches = []
+        for g, gp, c in zip(self._groups_for_range(cut, "client"),
+                            client_params["groups"], caches):
+            x, nc = group_decode(gp, g, x, c)
+            new_caches.append(nc)
+        return x, new_caches
+
+    def decode_step_server(self, server_params, act, cut: int, caches):
+        """act (B, 1, D) -> (logits (B, 1, V), caches)."""
+        x = act
+        new_caches = []
+        for g, gp, c in zip(self._groups_for_range(cut, "server"),
+                            server_params["groups"], caches):
+            x, nc = group_decode(gp, g, x, c)
+            new_caches.append(nc)
+        return self.server_head(server_params, x), new_caches
 
 
 def build_lm(cfg: ArchConfig, *, long_context: bool = False) -> LM:

@@ -55,6 +55,17 @@ def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
     return {"tokens": tok(B, 1)}
 
 
+def supports_split_serving(cfg: ArchConfig) -> tuple[bool, str]:
+    """(supported, reason-if-not) for the cut-at-layer serving engine
+    (serve/split_infer.py).  Encoder-decoder archs serve monolithically:
+    their split-learning mapping is vertical/multi-modal (encoder-side
+    client), not a decoder layer cut."""
+    if cfg.encdec:
+        return False, "encdec archs have no decoder layer cut; serve " \
+                      "monolithically"
+    return True, ""
+
+
 def supports_shape(cfg: ArchConfig, shape: InputShape) -> tuple[bool, str]:
     """(supported, reason-if-not).  Encodes the DESIGN.md §6 skip rules."""
     if shape.name == "long_500k":

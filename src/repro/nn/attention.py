@@ -189,16 +189,55 @@ def _dequant_kv(q, scale, dtype):
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
-def gqa_decode(params, cfg: AttnConfig, x, cache):
+def _ring_put(buf, val, slot, per_row: bool):
+    """Write the one-token row `val` (B, 1, ...) at ring slot(s) `slot` —
+    scalar slot for a uniform batch, (B,) slots when each row sits at its
+    own position (multi-tenant decode)."""
+    if per_row:
+        return buf.at[jnp.arange(buf.shape[0]), slot].set(val[:, 0])
+    return jax.lax.dynamic_update_slice(
+        buf, val, (0, slot) + (0,) * (buf.ndim - 2))
+
+
+def _valid_mask(pos, cache_len: int, batch: int, per_row: bool):
+    """(B, 1, T) attend-mask over the ring: index < min(pos+1, len)."""
+    idx = jnp.arange(cache_len)
+    limit = jnp.minimum(pos + 1, cache_len)
+    if per_row:
+        valid = idx[None, :] < limit[:, None]            # (B, T)
+    else:
+        valid = (idx < limit)[None, :]                   # (1, T)
+    return jnp.broadcast_to(valid[:, None, :], (batch, 1, cache_len))
+
+
+def gqa_decode(params, cfg: AttnConfig, x, cache, *, qkv=None):
     """One-token decode.  x: (B, 1, D).  Sliding-window caches are ring
-    buffers indexed mod window."""
+    buffers indexed mod window.
+
+    `cache["pos"]` is either the scalar cursor (every row at the same
+    position) or a per-row (B,) vector — the serving batcher keeps
+    independent tenants at independent positions inside one stacked
+    batch; padded slots simply keep advancing their own cursor.
+
+    `qkv` optionally supplies the precomputed flat (q, k, v) projections
+    (pre-rope, shapes (B, 1, H*hd)/(B, 1, K*hd)) — the serving engine's
+    fused packed-wire entry computes them straight from the int8 payload
+    and skips the dense projections here."""
     if cfg.decode_kv_shard is not None:
         return gqa_decode_sharded(params, cfg, x, cache,
                                   seq_axis=cfg.decode_kv_shard)
     B = x.shape[0]
-    q, k, v = _qkv(params, cfg, x)
+    if qkv is None:
+        q, k, v = _qkv(params, cfg, x)
+    else:
+        q, k, v = qkv
+        q = q.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        k = k.reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = v.reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
     pos = cache["pos"]
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    per_row = jnp.ndim(pos) == 1
+    positions = pos[:, None] if per_row else jnp.full((B, 1), pos,
+                                                      dtype=jnp.int32)
     q = apply_rope(q, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
     k = apply_rope(k, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
     cache_len = cache["k"].shape[1]
@@ -208,29 +247,65 @@ def gqa_decode(params, cfg: AttnConfig, x, cache):
         kq, ks = _quant_kv(k)
         vq, vs = _quant_kv(v)
         new_cache = {
-            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0)),
-            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0)),
-            "k_scale": jax.lax.dynamic_update_slice(
-                cache["k_scale"], ks, (0, slot, 0, 0)),
-            "v_scale": jax.lax.dynamic_update_slice(
-                cache["v_scale"], vs, (0, slot, 0, 0)),
+            "k": _ring_put(cache["k"], kq, slot, per_row),
+            "v": _ring_put(cache["v"], vq, slot, per_row),
+            "k_scale": _ring_put(cache["k_scale"], ks, slot, per_row),
+            "v_scale": _ring_put(cache["v_scale"], vs, slot, per_row),
         }
         new_k = _dequant_kv(new_cache["k"], new_cache["k_scale"], k.dtype)
         new_v = _dequant_kv(new_cache["v"], new_cache["v_scale"], v.dtype)
     else:
-        new_k = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-        new_v = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_k = _ring_put(cache["k"], k, slot, per_row)
+        new_v = _ring_put(cache["v"], v, slot, per_row)
         new_cache = {"k": new_k, "v": new_v}
     # valid slots: index < min(pos+1, cache_len); ring order is irrelevant to
     # softmax since rope already encoded absolute positions.
-    idx = jnp.arange(cache_len)
-    valid = idx < jnp.minimum(pos + 1, cache_len)
-    mask = valid[None, None, :]                          # (1, 1, T) -> (B,S,T)
-    mask = jnp.broadcast_to(mask, (B, 1, cache_len))
+    mask = _valid_mask(pos, cache_len, B, per_row)
     out = grouped_attention(q, new_k, new_v, mask,
                             scale=1.0 / math.sqrt(cfg.head_dim))
     y = L.dense_apply(params["wo"], out.reshape(B, 1, -1))
     new_cache["pos"] = pos + 1
+    return y, new_cache
+
+
+def gqa_prefill(params, cfg: AttnConfig, x, cache):
+    """Teacher-forced full-sequence forward that POPULATES a fresh decode
+    cache in ONE compiled pass — the same attention math as `gqa_apply`,
+    plus a scatter of the rope'd K/V rows into the ring slots and
+    `pos = S`.  Replaces the O(S) per-token decode_step prefill loop.
+
+    x: (B, S, D); assumes the cache is fresh (pos == 0).  For S beyond a
+    sliding-window ring only the last `cache_len` rows are kept (their
+    ring slots `p % cache_len` are distinct, so the scatter is exact)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, cfg, x)
+    positions = jnp.arange(S)
+    if cfg.kind != "bidir":
+        q = apply_rope(q, positions, theta=cfg.rope_theta,
+                       fraction=cfg.rope_fraction)
+        k = apply_rope(k, positions, theta=cfg.rope_theta,
+                       fraction=cfg.rope_fraction)
+    mask = causal_mask(S, S, window=cfg.window)
+    out = grouped_attention(q, k, v, mask, scale=1.0 / math.sqrt(cfg.head_dim))
+    y = L.dense_apply(params["wo"], out.reshape(B, S, -1))
+
+    cache_len = cache["k"].shape[1]
+    keep = min(S, cache_len)
+    slots = jnp.arange(S - keep, S) % cache_len
+    k_keep, v_keep = k[:, S - keep:], v[:, S - keep:]
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quant_kv(k_keep)
+        vq, vs = _quant_kv(v_keep)
+        new_cache = {
+            "k": cache["k"].at[:, slots].set(kq),
+            "v": cache["v"].at[:, slots].set(vq),
+            "k_scale": cache["k_scale"].at[:, slots].set(ks),
+            "v_scale": cache["v_scale"].at[:, slots].set(vs),
+        }
+    else:
+        new_cache = {"k": cache["k"].at[:, slots].set(k_keep),
+                     "v": cache["v"].at[:, slots].set(v_keep)}
+    new_cache["pos"] = jnp.full_like(cache["pos"], S)
     return y, new_cache
 
 
@@ -309,13 +384,17 @@ def mla_init_cache(cfg: AttnConfig, batch: int, max_len: int):
 def mla_decode(params, cfg: AttnConfig, x, cache):
     """Absorbed-weight decode: scores computed against the *compressed*
     cache c_kv directly — O(len * kv_lora_rank) per head, never
-    materializing per-token k/v.  This is the TPU-native MLA decode."""
+    materializing per-token k/v.  This is the TPU-native MLA decode.
+
+    As in `gqa_decode`, `cache["pos"]` may be scalar or per-row (B,)."""
     B = x.shape[0]
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     r = cfg.kv_lora_rank
     pos = cache["pos"]
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    per_row = jnp.ndim(pos) == 1
+    positions = pos[:, None] if per_row else jnp.full((B, 1), pos,
+                                                      dtype=jnp.int32)
 
     q_nope, q_pe = _mla_q(params, cfg, x)                # (B,1,H,dn),(B,1,H,dr)
     q_pe = apply_rope(q_pe, positions, theta=cfg.rope_theta)
@@ -328,8 +407,8 @@ def mla_decode(params, cfg: AttnConfig, x, cache):
 
     cache_len = cache["c_kv"].shape[1]
     slot = jnp.mod(pos, cache_len)
-    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, slot, 0))
-    k_pe = jax.lax.dynamic_update_slice(cache["k_pe"], kpe_new, (0, slot, 0))
+    c_kv = _ring_put(cache["c_kv"], c_new, slot, per_row)
+    k_pe = _ring_put(cache["k_pe"], kpe_new, slot, per_row)
 
     # absorb wk_b into q: q_eff[b,h,r'] = sum_dn q_nope * wk_b[r', h, dn]
     wk_b = params["wk_b"]["w"].reshape(r, H, dn)
@@ -340,15 +419,51 @@ def mla_decode(params, cfg: AttnConfig, x, cache):
     scores = scores + jnp.einsum("bshd,btd->bhst", q_pe.astype(jnp.float32),
                                  k_pe.astype(jnp.float32))
     scores = scores / math.sqrt(dn + dr)
-    idx = jnp.arange(cache_len)
-    valid = idx < jnp.minimum(pos + 1, cache_len)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    valid = _valid_mask(pos, cache_len, B, per_row)      # (B,1,T)
+    scores = jnp.where(valid[:, None, :, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)                  # (B,H,1,T)
     ctx = jnp.einsum("bhst,btr->bshr", w, c_kv.astype(jnp.float32))  # (B,1,H,r)
     wv_b = params["wv_b"]["w"].reshape(r, H, dv)
     out = jnp.einsum("bshr,rhd->bshd", ctx, wv_b.astype(jnp.float32))
     y = L.dense_apply(params["wo"], out.reshape(B, 1, H * dv).astype(x.dtype))
     return y, {"c_kv": c_kv, "k_pe": k_pe, "pos": pos + 1}
+
+
+def mla_prefill(params, cfg: AttnConfig, x, cache):
+    """Full-sequence MLA forward (same math as `mla_apply`) that also
+    scatters the COMPRESSED rows — post-norm c_kv and rope'd k_pe, exactly
+    what `mla_decode` stores — into a fresh cache, leaving pos = S."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    positions = jnp.arange(S)
+    q_nope, q_pe = _mla_q(params, cfg, x)
+    q_pe = apply_rope(q_pe, positions, theta=cfg.rope_theta)
+    kv = L.dense_apply(params["wkv_a"], x)               # (B,S,r+dr)
+    c_kv, k_pe = kv[..., :r], kv[..., r:]
+    c_kv = L.rmsnorm_apply(params["kv_norm"], c_kv)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions,
+                      theta=cfg.rope_theta)[:, :, 0, :]  # (B,S,dr)
+    k_nope = L.dense_apply(params["wk_b"], c_kv).reshape(B, S, H, dn)
+    v = L.dense_apply(params["wv_b"], c_kv).reshape(B, S, H, dv)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, dr))],
+        axis=-1)
+    mask = causal_mask(S, S, window=cfg.window)
+    out = grouped_attention(q, k, v, mask, scale=1.0 / math.sqrt(dn + dr))
+    y = L.dense_apply(params["wo"], out.reshape(B, S, -1))
+
+    cache_len = cache["c_kv"].shape[1]
+    keep = min(S, cache_len)
+    slots = jnp.arange(S - keep, S) % cache_len
+    new_cache = {
+        "c_kv": cache["c_kv"].at[:, slots].set(c_kv[:, S - keep:]),
+        "k_pe": cache["k_pe"].at[:, slots].set(k_pe[:, S - keep:]),
+        "pos": jnp.full_like(cache["pos"], S),
+    }
+    return y, new_cache
 
 
 # ---------------------------------------------------------------------------

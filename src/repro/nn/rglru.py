@@ -95,6 +95,27 @@ def rglru_init_cache(cfg: RGLRUConfig, batch: int):
     }
 
 
+def rglru_prefill(params, cfg: RGLRUConfig, x, cache):
+    """Full-sequence forward that POPULATES the recurrent cache in one
+    compiled pass.  x: (B,S,D) -> (y (B,S,D), cache).
+
+    The conv cache keeps the last `d_conv-1` RAW (pre-conv) h rows; the
+    recurrent state folds the cached h into the associative scan by
+    adding `a_1 * h_0` to the first input term (exact — the scan itself
+    assumes h_0 = 0)."""
+    gate = jax.nn.gelu(L.dense_apply(params["in_gate"], x))
+    h_in = L.dense_apply(params["in_x"], x)              # (B,S,W)
+    window = jnp.concatenate([cache["conv"], h_in], axis=1)
+    conv_out = L.conv1d_apply(params["conv"], window, padding="VALID")
+    new_conv = window[:, -(cfg.d_conv - 1):, :]
+    a, u = _rglru_gates(params, conv_out)                # (B,S,W) f32
+    u = u.at[:, 0].add(a[:, 0] * cache["h"])
+    hs = rglru_scan(a, u)                                # (B,S,W)
+    y = hs.astype(x.dtype)
+    out = L.dense_apply(params["out"], y * gate)
+    return out, {"conv": new_conv, "h": hs[:, -1]}
+
+
 def rglru_block_decode(params, cfg: RGLRUConfig, x, cache):
     """x: (B,1,D) one-step."""
     gate = jax.nn.gelu(L.dense_apply(params["in_gate"], x))

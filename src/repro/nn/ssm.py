@@ -38,10 +38,17 @@ class SSMConfig:
         return self.d_inner // self.head_dim
 
 
-def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int):
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int, initial_state=None,
+                return_state: bool = False):
     """Chunked SSD scan (the paper's Listing 1, in JAX).
 
     x: (B,S,H,P) dt: (B,S,H) A: (H,) Bm/Cm: (B,S,G,N) -> y: (B,S,H,P)
+
+    `initial_state` ((B,H,P,N) f32) seeds the inter-chunk recurrence —
+    with it, the output continues an earlier sequence exactly as the
+    recurrent decode would.  `return_state=True` additionally returns the
+    final state (the scan carry after the last chunk), so a prefill can
+    process full chunks and hand the carry to a remainder call / decode.
     """
     Bsz, S, H, P = x.shape
     G = Bm.shape[2]
@@ -91,8 +98,11 @@ def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int):
         new = carry * dk[:, :, None, None] + st
         return new, carry                                # emit state BEFORE chunk
 
-    init = jnp.zeros((Bsz, H, P, Cc.shape[-1]), jnp.float32)
-    _, prev_states = jax.lax.scan(
+    if initial_state is None:
+        init = jnp.zeros((Bsz, H, P, Cc.shape[-1]), jnp.float32)
+    else:
+        init = initial_state.astype(jnp.float32)
+    final_state, prev_states = jax.lax.scan(
         scan_fn, init,
         (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
     prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (B,nc,H,P,N)
@@ -104,7 +114,10 @@ def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int):
                          prev_states, in_decay)
 
     y = (y_intra + y_inter).reshape(Bsz, S, H, P)
-    return y.astype(x.dtype)
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, final_state
+    return y
 
 
 def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
@@ -185,6 +198,55 @@ def mamba2_init_cache(cfg: SSMConfig, batch: int):
         "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
                          jnp.float32),
     }
+
+
+def mamba2_prefill(params, cfg: SSMConfig, x, cache):
+    """Full-sequence forward that POPULATES the recurrent cache in one
+    compiled pass.  x: (B,S,D) -> (y (B,S,D), cache).
+
+    Handles arbitrary S (no `S % chunk == 0` restriction): the SSD scan
+    runs over the full chunks with the carried state threaded into a
+    single remainder call — front/back padding would be wrong here, since
+    padded steps still decay the state.  The conv cache keeps the last
+    `d_conv-1` RAW (pre-conv, pre-silu) xbc rows, exactly the window the
+    decode step shifts."""
+    B, S, D = x.shape
+    Di, H, G, N, P = (cfg.d_inner, cfg.n_heads, cfg.n_groups, cfg.d_state,
+                      cfg.head_dim)
+    zxbcdt = L.dense_apply(params["in_proj"], x)
+    z, xbc_raw, dt = jnp.split(zxbcdt, [Di, 2 * Di + 2 * G * N], axis=-1)
+    # conv over [cached window, raw rows]; fresh cache == the zero front
+    # padding of the train-time causal conv, so outputs match bitwise.
+    window = jnp.concatenate([cache["conv"], xbc_raw], axis=1)
+    xbc = jax.nn.silu(L.conv1d_apply(params["conv"], window, padding="VALID"))
+    new_conv = window[:, -(cfg.d_conv - 1):, :]
+    xs, Bm, Cm = jnp.split(xbc, [Di, Di + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt + params["dt_bias"][None, None, :])   # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                  # (H,) < 0
+
+    state = cache["ssm"]
+    c = min(cfg.chunk, S)
+    main = (S // c) * c
+    ys = []
+    if main:
+        y_main, state = ssd_chunked(
+            xs[:, :main], dt[:, :main], A, Bm[:, :main], Cm[:, :main],
+            chunk=c, initial_state=state, return_state=True)
+        ys.append(y_main)
+    if S - main:
+        y_rem, state = ssd_chunked(
+            xs[:, main:], dt[:, main:], A, Bm[:, main:], Cm[:, main:],
+            chunk=S - main, initial_state=state, return_state=True)
+        ys.append(y_rem)
+    y = ys[0] if len(ys) == 1 else jnp.concatenate(ys, axis=1)
+    y = y + xs * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, Di)
+    y = L.rmsnorm_apply(params["norm"], y) * jax.nn.silu(z)
+    return L.dense_apply(params["out_proj"], y), \
+        {"conv": new_conv, "ssm": state}
 
 
 def mamba2_decode(params, cfg: SSMConfig, x, cache):

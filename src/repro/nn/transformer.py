@@ -148,6 +148,27 @@ def block_decode(params, spec: BlockSpec, x, cache):
     return h, cache
 
 
+def block_prefill(params, spec: BlockSpec, x, cache):
+    """Full-sequence block forward that also populates the decode cache
+    in one compiled pass (same residual structure as `block_apply`)."""
+    xn = _norm_apply(params["norm1"], spec, x)
+    if spec.mixer == "attn":
+        y, cache = A.gqa_prefill(params["mixer"], spec.attn, xn, cache)
+    elif spec.mixer == "mla":
+        y, cache = A.mla_prefill(params["mixer"], spec.attn, xn, cache)
+    elif spec.mixer == "mamba2":
+        y, cache = S.mamba2_prefill(params["mixer"], spec.ssm, xn, cache)
+    elif spec.mixer == "rglru":
+        y, cache = R.rglru_prefill(params["mixer"], spec.rglru, xn, cache)
+    else:
+        raise ValueError(spec.mixer)
+    h = x + y
+    if spec.mlp != "none":
+        h = h + _mlp_apply(params["mlp"], spec,
+                           _norm_apply(params["norm2"], spec, h))
+    return h, cache
+
+
 # ---------------------------------------------------------------------------
 # Homogeneous stacks (scan over stacked params)
 # ---------------------------------------------------------------------------
@@ -182,6 +203,16 @@ def stack_decode(params, spec: BlockSpec, x, caches):
     def body(h, pc):
         layer_params, cache = pc
         h, new_cache = block_decode(layer_params, spec, h, cache)
+        return h, new_cache
+
+    out, new_caches = jax.lax.scan(body, x, (params, caches))
+    return out, new_caches
+
+
+def stack_prefill(params, spec: BlockSpec, x, caches):
+    def body(h, pc):
+        layer_params, cache = pc
+        h, new_cache = block_prefill(layer_params, spec, h, cache)
         return h, new_cache
 
     out, new_caches = jax.lax.scan(body, x, (params, caches))

@@ -1,0 +1,20 @@
+"""Compiled split-inference serving: the paper's client/server cut at
+inference time, with the training stack's wire middleware on every hop.
+
+    from repro.serve import ServePlan, ServeSession, Batcher
+
+    sess = ServePlan(arch="phi4_mini_3_8b", cut=2,
+                     wire="quantize_int8:physical").session(key)
+    toks = sess.generate(prompts, max_new=32)
+    print(sess.decode_cost().bytes_up)      # wire bytes per token, metered
+
+`ServeSession` is single-stream (one stacked batch, all rows in step);
+`Batcher` multiplexes independent tenants over one server cache with
+continuous batching (join on prefill, leave on EOS).
+"""
+from repro.serve.batcher import Batcher, Tenant
+from repro.serve.split_infer import (ServePlan, ServeSession,
+                                     greedy_decode_scan)
+
+__all__ = ["ServePlan", "ServeSession", "Batcher", "Tenant",
+           "greedy_decode_scan"]
